@@ -1,0 +1,19 @@
+"""Shared benchmark plumbing: CSV emission per the harness contract."""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.3f},{derived}")
+    sys.stdout.flush()
+
+
+class timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.dt = time.time() - self.t0

@@ -1,0 +1,55 @@
+"""Kernel-layer microbenchmarks: the WCRDT fold / merge / top-k hot paths.
+
+On this CPU host the jnp reference path runs (the Pallas kernels lower for
+TPU and are validated in interpret mode); the numbers are the real dataplane
+cost the simulation charges per batch.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.kernels.ops import crdt_merge, topk_window, window_agg
+
+
+def _time(fn, *args, reps=20):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / reps * 1e6  # us
+
+
+def main(quick: bool = False):
+    rng = np.random.default_rng(0)
+    B, W, C, k = 4096, 64, 8, 8
+    vals = jnp.array(rng.random(B, dtype=np.float32))
+    slots = jnp.array(rng.integers(0, W, B).astype(np.int32))
+    keys = jnp.array(rng.integers(0, C, B).astype(np.int32))
+    mask = jnp.ones(B, bool)
+
+    for op in ("sum", "max"):
+        us = _time(lambda: window_agg(vals, slots, mask, W, op=op))
+        emit(f"kernels/window_agg_{op}_B{B}_W{W}", us, f"ev_per_s={B/us*1e6/1e6:.1f}M")
+    us = _time(lambda: window_agg(vals, slots, mask, W, op="sum", keys=keys, C=C))
+    emit(f"kernels/window_agg_keyed_B{B}_W{W}_C{C}", us, f"ev_per_s={B/us*1e6/1e6:.1f}M")
+
+    stack = jnp.array(rng.random((16, 1 << 16), dtype=np.float32))
+    us = _time(lambda: crdt_merge(stack, op="max"))
+    emit("kernels/crdt_merge_R16_F65536", us, f"GBps={stack.nbytes/us*1e6/1e9:.1f}")
+
+    sv = jnp.full((W, k), -jnp.inf, jnp.float32)
+    si = jnp.zeros((W, k), jnp.uint32)
+    ids = jnp.array(rng.integers(0, 1000, B).astype(np.uint32))
+    us = _time(lambda: topk_window(sv, si, vals, ids, slots, mask))
+    emit(f"kernels/topk_window_B{B}_W{W}_k{k}", us, f"ev_per_s={B/us*1e6/1e6:.1f}M")
+
+
+if __name__ == "__main__":
+    main()

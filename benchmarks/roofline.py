@@ -1,0 +1,52 @@
+"""§Roofline: per-(arch x shape) roofline terms from the dry-run artifacts.
+
+Reads benchmarks/results/dryrun/*.json (written by repro.launch.dryrun) and
+prints the single-pod table: compute / memory / collective seconds per step,
+dominant term, and MODEL_FLOPS / HLO_FLOPs.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from benchmarks.common import emit
+
+RESULTS = pathlib.Path(__file__).resolve().parent / "results" / "dryrun"
+
+
+def load(mesh: str = "pod_16x16") -> list[dict]:
+    recs = []
+    for p in sorted(RESULTS.glob(f"*_{mesh}.json")):
+        recs.append(json.loads(p.read_text()))
+    return recs
+
+
+def main(quick: bool = False):
+    recs = load()
+    if not recs:
+        emit("roofline/missing", 0.0, "run `python -m repro.launch.dryrun --all` first")
+        return
+    for r in recs:
+        t = r["roofline"]
+        coll = r["collective_bytes_per_device"]
+        emit(
+            f"roofline/{r['arch']}/{r['cell']}",
+            t[max(("compute_s", "memory_s", "collective_s"), key=lambda k: t[k])] * 1e6,
+            f"compute_ms={t['compute_s']*1e3:.2f};memory_ms={t['memory_s']*1e3:.2f};"
+            f"collective_ms={t['collective_s']*1e3:.2f};dominant={t['dominant']};"
+            f"useful_flops_ratio={r['useful_flops_ratio'] and round(r['useful_flops_ratio'],3)};"
+            f"coll_bytes={coll.get('total',0):.2e}",
+        )
+    # summary: worst / best useful ratio, most collective-bound
+    scored = [r for r in recs if r.get("useful_flops_ratio")]
+    if scored:
+        worst = min(scored, key=lambda r: r["useful_flops_ratio"])
+        emit(
+            "roofline/summary", 0.0,
+            f"cells={len(recs)};worst_useful={worst['arch']}/{worst['cell']}"
+            f"={worst['useful_flops_ratio']:.3f}",
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Benchmark harness entry point — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines.  Sections:
+  fig6_table2   failure recovery latency (Holon vs Flink-like)
+  fig7_8        latency sensitivity under failures
+  fig9          scalability with cluster size
+  throughput    max-throughput (sim peak) + real dataplane events/s
+  roofline      per-(arch x shape) roofline terms from the dry-run
+  kernels       WCRDT fold/merge/topk microbenchmarks
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--quick] [--only SECTION]
+"""
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", type=str, default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (
+        failure_recovery,
+        kernels_bench,
+        roofline,
+        scalability,
+        sensitivity,
+        throughput,
+    )
+
+    sections = {
+        "kernels": kernels_bench.main,
+        "roofline": roofline.main,
+        "throughput": throughput.main,
+        "fig6_table2": failure_recovery.main,
+        "fig7_8": sensitivity.main,
+        "fig9": scalability.main,
+    }
+    print("name,us_per_call,derived")
+    failed = []
+    for name, fn in sections.items():
+        if args.only and args.only != name:
+            continue
+        try:
+            fn(quick=args.quick)
+        except Exception as e:  # noqa: BLE001
+            failed.append(name)
+            traceback.print_exc()
+            print(f"{name}/ERROR,0,{repr(e)[:120]}")
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

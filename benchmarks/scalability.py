@@ -1,0 +1,41 @@
+"""Paper Fig. 9: average Q7 latency vs cluster size at fixed per-node rate.
+
+Input volume scales with the cluster (10k events/s/partition), mirroring the
+paper's single-server emulation of 10..100 nodes.  The CPU container caps the
+simulated sizes at {5, 10, 20, 40} nodes (2 partitions/node).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import emit, timer
+from repro.runtime import SimConfig, run_flink, run_holon
+from repro.streaming import make_q7
+
+SIZES = (5, 10, 20, 40)
+
+
+def main(quick: bool = False):
+    sizes = SIZES[:3] if quick else SIZES
+    for n in sizes:
+        cfg = SimConfig(
+            num_nodes=n,
+            num_partitions=2 * n,
+            num_batches=120 if quick else 200,
+        )
+        q = make_q7(cfg.num_partitions, window_len=cfg.window_len, num_slots=cfg.num_slots)
+        with timer() as tm:
+            ch = run_holon(cfg, q)
+        sh = ch.latency_stats()
+        cf = run_flink(cfg, q)
+        sf = cf.latency_stats()
+        emit(
+            f"fig9_scalability/nodes_{n}",
+            tm.dt * 1e6,
+            f"holon_avg_ms={sh['avg']:.0f};flink_avg_ms={sf['avg']:.0f};"
+            f"ratio={sf['avg']/max(sh['avg'],1e-9):.2f}",
+        )
+
+
+if __name__ == "__main__":
+    main()

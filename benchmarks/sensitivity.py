@@ -1,0 +1,38 @@
+"""Paper Fig. 7/8: latency sensitivity (Stabl-style) across failure scenarios.
+
+Sensitivity = area between the with-failures latency curve and the
+failure-free baseline, summed over common (partition, window) keys.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, timer
+from repro.runtime import FailureScenario, SimConfig, run_flink, run_holon
+from repro.streaming import make_q7
+
+
+def main(quick: bool = False):
+    cfg = SimConfig(num_batches=200 if quick else 400)
+    q = make_q7(cfg.num_partitions, window_len=cfg.window_len, num_slots=cfg.num_slots)
+
+    out = {}
+    for system, runner in (("holon", run_holon), ("flink", run_flink)):
+        base = runner(cfg, q, FailureScenario.baseline(), horizon_ms=cfg.horizon_ms + 20_000)
+        for name, scen in (
+            ("concurrent", FailureScenario.concurrent()),
+            ("subsequent", FailureScenario.subsequent()),
+        ):
+            with timer() as tm:
+                c = runner(cfg, q, scen, horizon_ms=cfg.horizon_ms + 20_000)
+            sens = c.sensitivity(base)
+            out[(system, name)] = sens
+            emit(f"fig7_8_sensitivity/{system}/{name}", tm.dt * 1e6, f"sensitivity_s={sens:.2f}")
+
+    for name in ("concurrent", "subsequent"):
+        h, f = out.get(("holon", name), 0), out.get(("flink", name), 0)
+        if h > 0:
+            emit(f"fig7_8_sensitivity/ratio/{name}", 0.0, f"flink_over_holon_x={f/h:.1f}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

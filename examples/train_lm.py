@@ -1,0 +1,20 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps with the
+paper's runtime features live — WCRDT metric windows (deterministic global
+aggregation without barriers), decentralized checkpoints, crash recovery.
+
+Quick demo (tiny model, ~2 min):
+    PYTHONPATH=src python examples/train_lm.py
+Full run (100M params, a few hundred steps — hours on CPU, minutes on TPU):
+    PYTHONPATH=src python examples/train_lm.py --full
+"""
+import sys
+
+sys.argv = [sys.argv[0]] + (
+    ["--preset", "100m", "--steps", "300", "--batch", "8", "--seq", "512"]
+    if "--full" in sys.argv
+    else ["--preset", "tiny", "--steps", "40", "--crash-at", "25",
+          "--ckpt-every", "10", "--ckpt-dir", "/tmp/repro_example_ckpt"]
+)
+from repro.launch.train import main  # noqa: E402
+
+main()

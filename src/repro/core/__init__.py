@@ -1,0 +1,44 @@
+# The paper's primary contribution: CRDT lattices + Windowed CRDTs
+# (Algorithm 1) with watermark-gated deterministic reads, plus the
+# lattice-collective machinery that replaces gossip on a TPU mesh.
+from repro.core.lattice import (
+    Reduce,
+    axis_join as lattice_axis_join,
+    elementwise_join,
+    float_to_ordered_u32,
+    join,
+    join_many,
+    join_stacked,
+    lattice_dataclass,
+    lex_join,
+    ordered_u32_to_float,
+)
+from repro.core.crdt import (
+    GCounter,
+    GSet,
+    LWWReg,
+    MaxReg,
+    MinReg,
+    PNCounter,
+    TopK,
+)
+from repro.core.wcrdt import (
+    WSpec,
+    WState,
+    axis_join,
+    axis_join_aligned,
+    global_watermark,
+    increment_watermark,
+    insert,
+    merge,
+    wgcounter,
+    wgset,
+    window_complete,
+    window_value,
+    wmaxreg,
+    wminreg,
+    wpncounter,
+    wtopk,
+)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

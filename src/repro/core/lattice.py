@@ -1,0 +1,202 @@
+"""Join-semilattice machinery shared by every CRDT.
+
+The paper's CRDTs synchronize by gossip merges (Akka Distributed Data).  On a
+TPU pod the natural analogue is a *collective*: a CRDT whose merge decomposes
+into elementwise MAX / MIN / OR reductions can be joined across all replicas
+with a single ``jax.lax.pmax``-style all-reduce — the ICI ring *is* the gossip
+round.  This module defines the per-leaf reduce vocabulary, generic pairwise /
+N-way merges, and the order-preserving packings that let non-elementwise
+lattices (LWW registers over floats) ride a MAX reduction anyway.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import functools
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+class Reduce(enum.Enum):
+    """Elementwise lattice join kind for one pytree leaf."""
+
+    MAX = "max"
+    MIN = "min"
+    OR = "or"  # boolean / bitmask join
+
+
+def join_leaf(kind: Reduce, a: jax.Array, b: jax.Array) -> jax.Array:
+    if kind is Reduce.MAX:
+        return jnp.maximum(a, b)
+    if kind is Reduce.MIN:
+        return jnp.minimum(a, b)
+    if kind is Reduce.OR:
+        if a.dtype == jnp.bool_:
+            return jnp.logical_or(a, b)
+        return jnp.bitwise_or(a, b)
+    raise ValueError(f"unknown reduce kind {kind}")
+
+
+def axis_reduce_leaf(kind: Reduce, x: jax.Array, axis_name: str) -> jax.Array:
+    """Collective lattice join across a mesh axis (inside shard_map)."""
+    if kind is Reduce.MAX:
+        return lax.pmax(x, axis_name)
+    if kind is Reduce.MIN:
+        return lax.pmin(x, axis_name)
+    if kind is Reduce.OR:
+        if x.dtype == jnp.bool_:
+            return lax.pmax(x.astype(jnp.uint8), axis_name).astype(jnp.bool_)
+        # bitwise-or all-reduce: decompose into pmax per bit is wasteful; use
+        # all_gather + fold (single collective, log-depth fold is free compute).
+        g = lax.all_gather(x, axis_name)
+        return functools.reduce(jnp.bitwise_or, [g[i] for i in range(g.shape[0])])
+    raise ValueError(f"unknown reduce kind {kind}")
+
+
+# ---------------------------------------------------------------------------
+# Lattice-dataclass registry: each CRDT dataclass declares, per field, how the
+# field joins.  ``None`` marks a static/meta field (not merged, not a leaf).
+# ---------------------------------------------------------------------------
+
+_LATTICE_FIELDS: dict[type, dict[str, Reduce | str]] = {}
+
+
+def lattice_dataclass(cls=None, /, **field_kinds):
+    """Register ``cls`` as a frozen pytree dataclass with per-field joins.
+
+    field_kinds maps field name -> Reduce | "custom" (handled by cls.merge)
+    Fields not listed are treated as pytree data that custom merge handles.
+    """
+
+    def wrap(c):
+        c = dataclasses.dataclass(frozen=True)(c)
+        names = [f.name for f in dataclasses.fields(c)]
+        jax.tree_util.register_dataclass(c, data_fields=names, meta_fields=[])
+        _LATTICE_FIELDS[c] = dict(field_kinds)
+        return c
+
+    if cls is not None:
+        return wrap(cls)
+    return wrap
+
+
+def field_kinds(obj_or_cls) -> dict[str, Reduce | str]:
+    cls = obj_or_cls if isinstance(obj_or_cls, type) else type(obj_or_cls)
+    return _LATTICE_FIELDS[cls]
+
+
+def join(a, b):
+    """Generic pairwise lattice join.
+
+    Dispatches to ``a.merge(b)`` when the class defines one (non-elementwise
+    lattices), else joins field-by-field per the registered reduce kinds.
+    """
+    if hasattr(a, "merge"):
+        return a.merge(b)
+    return elementwise_join(a, b)
+
+
+def elementwise_join(a, b):
+    kinds = field_kinds(a)
+    out = {}
+    for name, kind in kinds.items():
+        va, vb = getattr(a, name), getattr(b, name)
+        if isinstance(kind, Reduce):
+            out[name] = jax.tree.map(lambda x, y, k=kind: join_leaf(k, x, y), va, vb)
+        else:
+            raise ValueError(f"field {name} needs custom merge")
+    return type(a)(**out)
+
+
+def join_many(states: Sequence[Any], merge_fn: Callable[[Any, Any], Any] | None = None):
+    """Log-depth fold of N replica states with an associative join."""
+    merge_fn = merge_fn or join
+    xs = list(states)
+    if not xs:
+        raise ValueError("join_many of empty sequence")
+    while len(xs) > 1:
+        nxt = [merge_fn(xs[i], xs[i + 1]) for i in range(0, len(xs) - 1, 2)]
+        if len(xs) % 2 == 1:
+            nxt.append(xs[-1])
+        xs = nxt
+    return xs[0]
+
+
+def join_stacked(stacked, merge_fn: Callable[[Any, Any], Any] | None = None):
+    """Join a pytree whose leaves carry a leading replica axis (from all_gather).
+
+    Log-depth halving so the collective-join path costs O(log R) vectorized
+    merges instead of an O(R) sequential fold.
+    """
+    merge_fn = merge_fn or join
+    n = jax.tree.leaves(stacked)[0].shape[0]
+    vmerge = jax.vmap(merge_fn)
+
+    def half(t, lo, hi):
+        return jax.tree.map(lambda x: x[lo:hi], t)
+
+    cur = stacked
+    while n > 1:
+        k = n // 2
+        merged = vmerge(half(cur, 0, k), half(cur, k, 2 * k))
+        if n % 2 == 1:
+            tail = half(cur, 2 * k, n)
+            cur = jax.tree.map(lambda m, t: jnp.concatenate([m, t], axis=0), merged, tail)
+            n = k + 1
+        else:
+            cur = merged
+            n = k
+    return jax.tree.map(lambda x: x[0] if x.ndim and x.shape[0] == 1 else x, cur)
+
+
+def axis_join(state, axis_name: str):
+    """Collective lattice join across ``axis_name`` for a registered lattice.
+
+    Elementwise lattices use p{max,min} directly (true all-reduce).  Custom
+    lattices fall back to all_gather + log-depth vectorized fold.
+    """
+    kinds = field_kinds(state)
+    if all(isinstance(k, Reduce) for k in kinds.values()) and not hasattr(state, "merge"):
+        out = {}
+        for name, kind in kinds.items():
+            out[name] = jax.tree.map(
+                lambda x, k=kind: axis_reduce_leaf(k, x, axis_name), getattr(state, name)
+            )
+        return type(state)(**out)
+    gathered = jax.tree.map(lambda x: lax.all_gather(x, axis_name), state)
+    return join_stacked(gathered, merge_fn=join)
+
+
+# ---------------------------------------------------------------------------
+# Order-preserving packings: let lexicographic lattices (LWW, arg-max) ride a
+# plain MAX reduction.
+# ---------------------------------------------------------------------------
+
+
+def float_to_ordered_u32(x: jax.Array) -> jax.Array:
+    """Monotone bijection f32 -> u32: a<b  <=>  f(a)<f(b) (IEEE754 trick)."""
+    bits = lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+    sign = bits >> 31
+    return jnp.where(sign == 1, ~bits, bits | jnp.uint32(0x80000000))
+
+
+def ordered_u32_to_float(u: jax.Array) -> jax.Array:
+    sign = u >> 31
+    bits = jnp.where(sign == 0, ~u, u & jnp.uint32(0x7FFFFFFF))
+    return lax.bitcast_convert_type(bits.astype(jnp.uint32), jnp.float32)
+
+
+def lex_join(
+    ts_a: jax.Array, val_a: jax.Array, ts_b: jax.Array, val_b: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Lexicographic (timestamp, payload) join — the LWW-register lattice.
+
+    Larger timestamp wins; ties broken deterministically by larger payload
+    (ordered-u32 compare), so the join is commutative, associative, and
+    idempotent without needing a 64-bit packing (works with x64 disabled).
+    """
+    a_wins = (ts_a > ts_b) | ((ts_a == ts_b) & (val_a >= val_b))
+    return jnp.where(a_wins, ts_a, ts_b), jnp.where(a_wins, val_a, val_b)

@@ -1,0 +1,77 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+Dispatch policy: `pl.pallas_call` lowers natively on TPU; elsewhere the
+wrappers fall back to the jnp reference (bit-identical semantics), keeping
+the 512-device CPU dry-run pure XLA.  Tests exercise the kernels with
+``interpret=True`` against the refs across shape/dtype sweeps.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.crdt_merge import crdt_merge_pallas
+from repro.kernels.topk_window import topk_window_pallas
+from repro.kernels.window_agg import window_agg_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("W", "op", "C", "use_pallas", "interpret"))
+def window_agg(
+    vals, slots, mask, W: int, op: str = "sum", keys=None, C: int = 1,
+    init=None, use_pallas: bool | None = None, interpret: bool = False,
+):
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        out = window_agg_pallas(
+            vals, slots, mask, W, op=op, keys=keys, C=C, interpret=interpret
+        )
+        if init is not None:
+            if op in ("sum", "count"):
+                out = out + init
+            elif op == "max":
+                out = jnp.maximum(out, init)
+            else:
+                out = jnp.minimum(out, init)
+        return out
+    return _ref.window_agg_ref(vals, slots, mask, W, op=op, keys=keys, C=C, init=init)
+
+
+@partial(jax.jit, static_argnames=("op", "use_pallas", "interpret"))
+def crdt_merge(stack, op: str = "max", use_pallas: bool | None = None, interpret: bool = False):
+    """Join [R, ...] replica stack along axis 0 (flattens trailing dims)."""
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if not use:
+        return _ref.crdt_merge_ref(stack, op=op)
+    R = stack.shape[0]
+    trailing = stack.shape[1:]
+    flat = stack.reshape(R, -1)
+    F = flat.shape[1]
+    tile = 1024
+    pad = (-F) % tile
+    if pad:
+        fill = {"max": -jnp.inf, "min": jnp.inf, "or": 0}[op]
+        if not jnp.issubdtype(flat.dtype, jnp.floating):
+            fill = 0
+        flat = jnp.pad(flat, ((0, 0), (0, pad)), constant_values=fill)
+    out = crdt_merge_pallas(flat, op=op, tile_f=tile, interpret=interpret)
+    return out[:F].reshape(trailing)
+
+
+@partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def topk_window(
+    state_vals, state_ids, vals, ids, slots, mask,
+    use_pallas: bool | None = None, interpret: bool = False,
+):
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        return topk_window_pallas(
+            state_vals, state_ids, vals, ids, slots, mask, interpret=interpret
+        )
+    return _ref.topk_window_ref(state_vals, state_ids, vals, ids, slots, mask)

@@ -1,0 +1,85 @@
+"""Pure-jnp oracles for every kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def window_agg_ref(
+    vals: jax.Array,  # f32[B]
+    slots: jax.Array,  # i32[B] in [0, W)
+    mask: jax.Array,  # bool[B]
+    W: int,
+    op: str = "sum",
+    keys: jax.Array | None = None,  # i32[B] in [0, C) (keyed aggregation)
+    C: int = 1,
+    init: jax.Array | None = None,  # [W] or [W, C] running state
+):
+    """Fold a batch of events into per-window (optionally per-key) aggregates."""
+    neutral = {"sum": 0.0, "count": 0.0, "max": -jnp.inf, "min": jnp.inf}[op]
+    v = vals.astype(jnp.float32)
+    if op == "count":
+        v = jnp.ones_like(v)
+    v = jnp.where(mask, v, neutral)
+    if keys is None:
+        seg = slots
+        n_seg = W
+        shape = (W,)
+    else:
+        seg = slots * C + keys
+        n_seg = W * C
+        shape = (W, C)
+    if op in ("sum", "count"):
+        out = jax.ops.segment_sum(v, seg, num_segments=n_seg)
+    elif op == "max":
+        out = jax.ops.segment_max(v, seg, num_segments=n_seg)
+        out = jnp.maximum(out, -jnp.inf)
+    else:
+        out = jax.ops.segment_min(v, seg, num_segments=n_seg)
+        out = jnp.minimum(out, jnp.inf)
+    out = out.reshape(shape)
+    if init is not None:
+        if op in ("sum", "count"):
+            out = out + init
+        elif op == "max":
+            out = jnp.maximum(out, init)
+        else:
+            out = jnp.minimum(out, init)
+    return out
+
+
+def crdt_merge_ref(stack: jax.Array, op: str = "max") -> jax.Array:
+    """Lattice join of R replica states: reduce over axis 0.
+
+    stack: [R, ...]; op in {max, min, or, sum-slots (per-actor max is 'max')}.
+    """
+    if op == "max":
+        return jnp.max(stack, axis=0)
+    if op == "min":
+        return jnp.min(stack, axis=0)
+    if op == "or":
+        return jnp.bitwise_or.reduce(stack, axis=0) if stack.dtype != jnp.bool_ else jnp.any(stack, axis=0)
+    raise ValueError(op)
+
+
+def topk_window_ref(
+    state_vals: jax.Array,  # f32[W, k] desc-sorted, -inf padded
+    state_ids: jax.Array,  # u32[W, k]
+    vals: jax.Array,  # f32[B]
+    ids: jax.Array,  # u32[B]
+    slots: jax.Array,  # i32[B]
+    mask: jax.Array,  # bool[B]
+):
+    """Per-window top-k merge of a batch into the running state (Q7)."""
+    W, k = state_vals.shape
+
+    def per_window(w, sv, si):
+        m = mask & (slots == w)
+        bv = jnp.where(m, vals.astype(jnp.float32), -jnp.inf)
+        bi = jnp.where(m, ids, 0).astype(jnp.uint32)
+        cv = jnp.concatenate([sv, bv])
+        ci = jnp.concatenate([si, bi])
+        svv, sii = jax.lax.sort((cv, ci), dimension=0, num_keys=2)
+        return svv[-k:][::-1], sii[-k:][::-1]
+
+    return jax.vmap(per_window)(jnp.arange(W), state_vals, state_ids)

@@ -1,0 +1,70 @@
+"""Pallas TPU kernel: per-window bounded top-k merge (Q7 "highest bids").
+
+Grid: one program per window.  Each program masks the event tile to its
+window and folds it into the window's running top-k by k rounds of
+max-extraction (k <= 16, so k sequential VPU reductions beat a full sort;
+lexicographic (val, id) order keeps the lattice deterministic).  The [W, k]
+state stays VMEM-resident; events stream once.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = float("-inf")  # python literal: pallas kernels must not capture arrays
+
+
+def _kernel(sv_ref, si_ref, vals_ref, ids_ref, slots_ref, mask_ref, ov_ref, oi_ref, *, k: int):
+    w = pl.program_id(0)
+    m = mask_ref[...] & (slots_ref[...] == w)
+    bv = jnp.where(m, vals_ref[...].astype(jnp.float32), NEG)  # [B]
+    bi = jnp.where(m, ids_ref[...], 0).astype(jnp.uint32)
+    cv = jnp.concatenate([sv_ref[...].reshape(-1), bv])  # [k + B]
+    ci = jnp.concatenate([si_ref[...].reshape(-1), bi])
+
+    out_v = jnp.zeros((k,), jnp.float32)
+    out_i = jnp.zeros((k,), jnp.uint32)
+    for j in range(k):  # k rounds of lexicographic argmax-extract
+        # order by (val, id): strictly larger val wins; ties -> larger id
+        best_v = jnp.max(cv)
+        is_best_v = cv == best_v
+        best_i = jnp.max(jnp.where(is_best_v, ci, 0))
+        out_v = out_v.at[j].set(best_v)
+        out_i = out_i.at[j].set(best_i)
+        taken = is_best_v & (ci == best_i)
+        # remove exactly the taken entries (dedups identical (v, id) pairs —
+        # set semantics of the TopK lattice)
+        cv = jnp.where(taken, NEG, cv)
+        ci = jnp.where(taken, 0, ci)
+    ov_ref[...] = out_v.reshape(1, k)
+    oi_ref[...] = out_i.reshape(1, k)
+
+
+def topk_window_pallas(
+    state_vals: jax.Array,  # f32[W, k]
+    state_ids: jax.Array,  # u32[W, k]
+    vals: jax.Array,  # f32[B]
+    ids: jax.Array,  # u32[B]
+    slots: jax.Array,  # i32[B]
+    mask: jax.Array,  # bool[B]
+    interpret: bool = False,
+):
+    W, k = state_vals.shape
+    B = vals.shape[0]
+    ev = pl.BlockSpec((B,), lambda w: (0,))
+    st = pl.BlockSpec((1, k), lambda w: (w, 0))
+    ov, oi = pl.pallas_call(
+        functools.partial(_kernel, k=k),
+        grid=(W,),
+        in_specs=[st, st, ev, ev, ev, ev],
+        out_specs=[st, st],
+        out_shape=[
+            jax.ShapeDtypeStruct((W, k), jnp.float32),
+            jax.ShapeDtypeStruct((W, k), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(state_vals, state_ids, vals, ids, slots, mask)
+    return ov, oi

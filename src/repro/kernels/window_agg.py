@@ -1,0 +1,126 @@
+"""Pallas TPU kernel: windowed event aggregation (the WCRDT fold hot path).
+
+TPU adaptation of the paper's per-event insert loop (DESIGN.md §5): the
+scatter becomes a **one-hot contraction** so the MXU does the segment
+reduction —
+
+    sum/count :  out[w(,c)] += Σ_b onehot_w[b,w] · v[b] (· onehot_c[b,c])
+                 → a [bt,W]ᵀ×[bt,C] matmul per event tile (MXU), or a
+                   masked-broadcast reduce for the unkeyed case (VPU),
+    max/min   :  masked broadcast + reduce over the event tile (VPU).
+
+Grid: one program per event tile of ``bt`` events; the [W(,C)] window state
+stays resident in VMEM across the whole grid (accumulator revisiting), so
+HBM traffic is events-in + state once.
+
+Tiling notes: bt is a multiple of 8 (sublane), W·C lanes padded to 128 by the
+caller (ops.py); fp32 accumulation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEUTRAL = {"sum": 0.0, "count": 0.0, "max": -jnp.inf, "min": jnp.inf}
+
+
+def _kernel_unkeyed(vals_ref, slots_ref, mask_ref, out_ref, *, op: str, W: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, NEUTRAL[op])
+
+    v = vals_ref[...].astype(jnp.float32)  # [bt]
+    if op == "count":
+        v = jnp.ones_like(v)
+    m = mask_ref[...]
+    slots = slots_ref[...]
+    onehot = slots[:, None] == jax.lax.broadcasted_iota(jnp.int32, (1, W), 1)
+    onehot = onehot & m[:, None]  # [bt, W]
+    if op in ("sum", "count"):
+        out_ref[...] += jnp.sum(jnp.where(onehot, v[:, None], 0.0), axis=0)
+    elif op == "max":
+        tile = jnp.max(jnp.where(onehot, v[:, None], -jnp.inf), axis=0)
+        out_ref[...] = jnp.maximum(out_ref[...], tile)
+    else:
+        tile = jnp.min(jnp.where(onehot, v[:, None], jnp.inf), axis=0)
+        out_ref[...] = jnp.minimum(out_ref[...], tile)
+
+
+def _kernel_keyed(vals_ref, slots_ref, keys_ref, mask_ref, out_ref, *, op: str, W: int, C: int):
+    """Keyed sum via MXU: out[W, C] += onehot_wᵀ @ (v ⊙ onehot_c)."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, NEUTRAL[op])
+
+    v = vals_ref[...].astype(jnp.float32)
+    if op == "count":
+        v = jnp.ones_like(v)
+    m = mask_ref[...]
+    slots, keys = slots_ref[...], keys_ref[...]
+    bt = v.shape[0]
+    oh_w = (slots[:, None] == jax.lax.broadcasted_iota(jnp.int32, (1, W), 1)) & m[:, None]
+    oh_c = keys[:, None] == jax.lax.broadcasted_iota(jnp.int32, (1, C), 1)
+    if op in ("sum", "count"):
+        rhs = jnp.where(oh_c, v[:, None], 0.0)  # [bt, C]
+        out_ref[...] += jax.lax.dot_general(
+            oh_w.astype(jnp.float32),
+            rhs,
+            (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+    else:  # max/min: VPU masked reduce over [bt, W, C] in W-strips
+        big = jnp.where(
+            oh_w[:, :, None] & oh_c[:, None, :], v[:, None, None],
+            NEUTRAL[op],
+        )
+        red = jnp.max(big, axis=0) if op == "max" else jnp.min(big, axis=0)
+        if op == "max":
+            out_ref[...] = jnp.maximum(out_ref[...], red)
+        else:
+            out_ref[...] = jnp.minimum(out_ref[...], red)
+
+
+def window_agg_pallas(
+    vals: jax.Array,
+    slots: jax.Array,
+    mask: jax.Array,
+    W: int,
+    op: str = "sum",
+    keys: jax.Array | None = None,
+    C: int = 1,
+    block_b: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns [W] (unkeyed) or [W, C] (keyed) fp32 aggregates."""
+    B = vals.shape[0]
+    assert B % block_b == 0, (B, block_b)
+    grid = (B // block_b,)
+    ev_spec = pl.BlockSpec((block_b,), lambda i: (i,))
+    if keys is None:
+        out_spec = pl.BlockSpec((W,), lambda i: (0,))
+        fn = functools.partial(_kernel_unkeyed, op=op, W=W)
+        return pl.pallas_call(
+            fn,
+            grid=grid,
+            in_specs=[ev_spec, ev_spec, ev_spec],
+            out_specs=out_spec,
+            out_shape=jax.ShapeDtypeStruct((W,), jnp.float32),
+            interpret=interpret,
+        )(vals, slots, mask)
+    out_spec = pl.BlockSpec((W, C), lambda i: (0, 0))
+    fn = functools.partial(_kernel_keyed, op=op, W=W, C=C)
+    return pl.pallas_call(
+        fn,
+        grid=grid,
+        in_specs=[ev_spec, ev_spec, ev_spec, ev_spec],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((W, C), jnp.float32),
+        interpret=interpret,
+    )(vals, slots, keys, mask)

@@ -1,0 +1,479 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+# ^ MUST precede every other import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (architecture × input-shape) cell
+on the production meshes and extract the roofline terms.
+
+For each cell we build abstract (ShapeDtypeStruct) params / optimizer state /
+inputs — no host RAM is allocated — assign shardings, `.lower().compile()`
+under the mesh, and record:
+
+  * compiled.memory_analysis()  — proves the working set fits per device,
+  * compiled.cost_analysis()    — HLO FLOPs / bytes for the roofline,
+  * a collective-bytes parse of the HLO (all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute operand bytes),
+
+written to benchmarks/results/dryrun/<arch>_<cell>_<mesh>.json and summarized
+in EXPERIMENTS.md §Dry-run.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch minitron-4b --cell train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod-only|--single-pod-only]
+"""
+import argparse
+import json
+import pathlib
+import re
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_config, list_archs, runnable_cells
+from repro.launch import hlo_analysis
+from repro.launch import shardings as sh
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm
+from repro.training.optimizer import AdamWState
+from repro.training.train_step import make_prefill_step, make_serve_step, make_train_step
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "dryrun"
+
+# v5e hardware constants (roofline denominators)
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s / chip
+LINK_BW = 50e9  # B/s / link (ICI)
+
+_DTYPE_BYTES = {
+    "f32": 4, "bf16": 2, "f16": 2, "f64": 8, "s32": 4, "u32": 4, "s8": 1,
+    "u8": 1, "pred": 1, "s16": 2, "u16": 2, "s64": 8, "u64": 8, "f8e4m3": 1,
+    "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(\w+)\[([\d,]*)\][^=]*?\b"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)\b"
+)
+
+
+def parse_collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Sum tensor bytes per collective kind from compiled HLO.
+
+    Ring-model factors convert tensor size to bytes crossing links:
+    all-reduce 2x (reduce-scatter + all-gather phases), others 1x.
+    """
+    totals: dict[str, float] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        b = n * _DTYPE_BYTES[dtype]
+        factor = 2.0 if kind == "all-reduce" else 1.0
+        totals[kind] = totals.get(kind, 0.0) + b * factor
+    totals["total"] = sum(v for k, v in totals.items() if k != "total")
+    return totals
+
+
+# --------------------------------------------------------------------------
+# abstract inputs per (arch, cell)
+# --------------------------------------------------------------------------
+
+
+def input_specs(arch: str, cell_name: str) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    cfg = get_config(arch)
+    cell = SHAPES[cell_name]
+    B, S = cell.global_batch, cell.seq_len
+    f = jnp.bfloat16
+    if cell.kind == "train":
+        if cfg.is_enc_dec:
+            dec = S // 4
+            return {
+                "tokens": jax.ShapeDtypeStruct((B, dec), jnp.int32),
+                "enc_embeds": jax.ShapeDtypeStruct((B, S, cfg.d_model), f),
+            }
+        if cfg.family == "vlm":
+            P = cfg.frontend_prefix
+            return {
+                "tokens": jax.ShapeDtypeStruct((B, S - P), jnp.int32),
+                "prefix_embeds": jax.ShapeDtypeStruct((B, P, cfg.d_model), f),
+            }
+        return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if cell.kind == "prefill":
+        if cfg.is_enc_dec:
+            dec = S // 4
+            return {
+                "enc_embeds": jax.ShapeDtypeStruct((B, S, cfg.d_model), f),
+                "tokens": jax.ShapeDtypeStruct((B, dec), jnp.int32),
+            }
+        if cfg.family == "vlm":
+            P = cfg.frontend_prefix
+            return {
+                "tokens": jax.ShapeDtypeStruct((B, S - P), jnp.int32),
+                "prefix_embeds": jax.ShapeDtypeStruct((B, P, cfg.d_model), f),
+            }
+        return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    # decode: one new token against a seq_len KV cache
+    return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+
+
+def abstract_params(cfg, dtype=jnp.bfloat16):
+    return jax.eval_shape(lambda k: lm.init_params(cfg, k, dtype), jax.random.PRNGKey(0))
+
+
+def abstract_cache(cfg, B: int, T: int, dtype=jnp.bfloat16):
+    from repro.models import cache_spec
+
+    return jax.eval_shape(lambda: cache_spec(cfg, B, T, dtype))
+
+
+def count_params(abs_params) -> int:
+    import math
+
+    return sum(math.prod(l.shape) for l in jax.tree.leaves(abs_params))
+
+
+def model_flops(cfg, cell, n_params: int) -> float:
+    """6·N·D for training; 2·N·D for forward-only (prefill/decode)."""
+    if cell.kind == "train":
+        if cfg.is_enc_dec:
+            tokens = cell.global_batch * (cell.seq_len + cell.seq_len // 4)
+        else:
+            tokens = cell.global_batch * cell.seq_len
+        n = active_params(cfg, n_params)
+        return 6.0 * n * tokens
+    if cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        return 2.0 * active_params(cfg, n_params) * tokens
+    return 2.0 * active_params(cfg, n_params) * cell.global_batch  # decode: 1 tok
+
+
+def active_params(cfg, n_params: int) -> float:
+    """MoE: count only top-k of the expert params as active."""
+    if cfg.moe_experts:
+        # expert share of total params (approximate from dims)
+        n_moe_layers = cfg.n_layers // cfg.moe_every
+        expert_p = n_moe_layers * cfg.moe_experts * 3 * cfg.d_model * (cfg.moe_d_ff or cfg.d_ff)
+        active_expert = expert_p * cfg.moe_top_k / cfg.moe_experts
+        return n_params - expert_p + active_expert
+    return float(n_params)
+
+
+def analytic_bytes(cfg, cell, n_params: int, n_chips: int) -> float:
+    """Per-chip HBM traffic model (bytes/step) for the roofline memory term.
+
+    Why not HLO bytes: the CPU backend leaves bf16<->f32 converts and copies
+    unfused that TPU XLA fuses away, inflating parsed bytes ~5-10x (measured;
+    EXPERIMENTS.md §Dry-run).  This model counts the traffic a fused TPU
+    execution pays:
+
+      train:   weight shard read x3 (fwd, remat-recompute, bwd) + optimizer
+               read/write (bf16 param + 2 fp32 moments + fp32 grad r/w)
+               + residual-stream activations (~16 r/w passes per layer with
+               remat) + attention score blocks (2 passes, fp32)
+               + logits chunks (fwd+bwd)
+      prefill: weight shard read x1 + activations x4 + scores x1 + KV write
+      decode:  weight shard read x1 + KV cache read+write + activations
+    """
+    cell_kind = cell.kind
+    B, S = cell.global_batch, cell.seq_len
+    D, L = cfg.d_model, cfg.n_layers
+    Hp = ((cfg.n_heads + 15) // 16) * 16
+    hd = cfg.head_dim
+    V = cfg.vocab
+    p_shard = n_params / n_chips
+    dp = min(B, 32 if n_chips == 512 else 16)  # batch ways (pod x data)
+    tp = 16
+    b_loc = max(1, B // dp)
+    h_loc = max(1, Hp // tp)
+
+    act_tok = b_loc * S * D * 2  # one residual tensor, bf16
+    if cell_kind == "train":
+        w = p_shard * 2 * 3 + p_shard * (2 * 2 + 8 * 2 + 4 * 2)  # fwd/remat/bwd + opt
+        acts = 16 * L * act_tok
+        if cfg.family in ("ssm", "hybrid"):
+            scores = 0.0
+            n_ssm = L
+            acts += 10 * n_ssm * b_loc * S * cfg.d_inner * 2 / tp * min(tp, 16)
+        else:
+            n_attn = L if cfg.family != "hybrid" else L // max(1, cfg.hybrid_attn_every)
+            scores = 2 * n_attn * b_loc * h_loc * S * S * 4
+        logits = 2 * 2 * b_loc * S * (V / tp) * 2
+        return w + acts + scores + logits
+    if cell_kind == "prefill":
+        w = p_shard * 2
+        acts = 6 * L * act_tok
+        if cfg.family in ("ssm", "hybrid"):
+            scores = 0.0
+        else:
+            scores = 1 * L * b_loc * h_loc * S * S * 4
+        kv = 2 * L * b_loc * S * h_loc * hd * 2
+        return w + acts + scores + kv
+    # decode
+    w = p_shard * 2
+    T = S if not (cfg.family == "hybrid" and S > 65536) else cfg.long_context_window
+    if cfg.family == "ssm":
+        cache = 2 * L * b_loc * cfg.d_inner / tp * max(1, cfg.ssm_state) * 4
+    elif cfg.family == "hybrid":
+        n_attn = L // max(1, cfg.hybrid_attn_every)
+        cache = n_attn * b_loc * T * h_loc * hd * 2 * 2
+        cache += 2 * L * b_loc * (cfg.d_inner / tp) * max(1, cfg.ssm_state) * 4
+    else:
+        n_attn = L if cfg.family != "moe" else L
+        cache = n_attn * b_loc * T * h_loc * hd * 2 * 2  # read k+v (+ring write small)
+    acts = 8 * L * b_loc * 1 * D * 2
+    return w + cache + acts
+
+
+# --------------------------------------------------------------------------
+# the dry-run of one cell
+# --------------------------------------------------------------------------
+
+
+def run_cell(
+    arch: str,
+    cell_name: str,
+    *,
+    multi_pod: bool = False,
+    q_chunk: int = 512,
+    ssm_chunk: int = 256,
+    strategy: str = "megatron",
+    save: bool = True,
+    verbose: bool = True,
+) -> dict:
+    cfg = get_config(arch)
+    cell = SHAPES[cell_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    mesh_name = "multipod_2x16x16" if multi_pod else "pod_16x16"
+
+    from repro.models import flags
+
+    if strategy == "zero3":
+        # pure DP: model axis joins the batch; no TP, no head padding
+        flags.set_tp_pad(1)
+        flags.set_batch_axes(("pod", "data", "model"))
+    else:
+        flags.set_tp_pad(16)  # model-axis size: pad head counts to shard evenly
+        flags.set_batch_axes(("pod", "data"))
+
+    abs_params = abstract_params(cfg)
+    n_params = count_params(abs_params)
+    p_shard = sh.shard_params(abs_params, mesh, cfg, strategy=strategy)
+    inputs = input_specs(arch, cell_name)
+    in_shard = sh.shard_inputs(inputs, mesh)
+
+    t0 = time.time()
+    with mesh:
+        if cell.kind == "train":
+            abs_opt = jax.eval_shape(
+                lambda p: AdamWState(
+                    step=jnp.zeros((), jnp.int32),
+                    mu=jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), p),
+                    nu=jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), p),
+                ),
+                abs_params,
+            )
+            opt_shard = AdamWState(
+                step=sh.replicated(mesh),
+                mu=jax.tree.map(
+                    lambda s: jax.sharding.NamedSharding(mesh, s.spec), p_shard
+                ),
+                nu=jax.tree.map(
+                    lambda s: jax.sharding.NamedSharding(mesh, s.spec), p_shard
+                ),
+            )
+            step = make_train_step(cfg, q_chunk=q_chunk, ssm_chunk=ssm_chunk)
+            jitted = jax.jit(step, in_shardings=(p_shard, opt_shard, in_shard))
+            lowered = jitted.lower(abs_params, abs_opt, inputs)
+        elif cell.kind == "prefill":
+            step = make_prefill_step(cfg, q_chunk=q_chunk, ssm_chunk=ssm_chunk)
+            if cfg.is_enc_dec:
+                jitted = jax.jit(
+                    step, in_shardings=(p_shard, in_shard["enc_embeds"], in_shard["tokens"])
+                )
+                lowered = jitted.lower(abs_params, inputs["enc_embeds"], inputs["tokens"])
+            elif cfg.family == "vlm":
+                jitted = jax.jit(
+                    step,
+                    in_shardings=(p_shard, in_shard["tokens"], in_shard["prefix_embeds"]),
+                )
+                lowered = jitted.lower(abs_params, inputs["tokens"], inputs["prefix_embeds"])
+            else:
+                jitted = jax.jit(step, in_shardings=(p_shard, in_shard["tokens"]))
+                lowered = jitted.lower(abs_params, inputs["tokens"])
+        else:  # decode
+            B = cell.global_batch
+            T = cell.seq_len
+            if cfg.family == "hybrid" and T > 65536:
+                pass  # ring cache sized inside cache_spec
+            abs_cache = abstract_cache(cfg, B, T)
+            c_shard = sh.shard_cache(abs_cache, mesh, ssm_version=cfg.ssm_version)
+            step = make_serve_step(cfg)
+            pos = jax.ShapeDtypeStruct((), jnp.int32)
+            if cfg.is_enc_dec:
+                d = lm.attn_dims(cfg, causal=False)
+                enc_T = T  # encoder memory length
+                abs_enc_kv = jax.eval_shape(
+                    lambda: jax.tree.map(
+                        lambda x: jnp.zeros((cfg.dec_layers, *x.shape), x.dtype),
+                        {
+                            "k": jnp.zeros((B, enc_T, cfg.n_heads, cfg.head_dim), jnp.bfloat16),
+                            "v": jnp.zeros((B, enc_T, cfg.n_heads, cfg.head_dim), jnp.bfloat16),
+                        },
+                    )
+                )
+                ekv_shard = sh.shard_cache(abs_enc_kv, mesh)
+                jitted = jax.jit(
+                    step,
+                    in_shardings=(p_shard, c_shard, in_shard["tokens"], sh.replicated(mesh), ekv_shard),
+                )
+                lowered = jitted.lower(abs_params, abs_cache, inputs["tokens"], pos, abs_enc_kv)
+            else:
+                jitted = jax.jit(
+                    step,
+                    in_shardings=(p_shard, c_shard, in_shard["tokens"], sh.replicated(mesh)),
+                )
+                lowered = jitted.lower(abs_params, abs_cache, inputs["tokens"], pos)
+
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    corrected = hlo_analysis.analyze(hlo)
+
+    # Semantics (calibrated, see EXPERIMENTS.md §Dry-run): post-SPMD HLO
+    # shapes are PER-DEVICE, and raw cost_analysis counts while bodies once;
+    # `corrected` re-walks the call graph with scan trip counts.  Terms below
+    # are per-chip seconds — identical to global/(chips·rate).
+    flops_dev = corrected["flops"]
+    bytes_dev = corrected["bytes"]
+    coll = corrected["collective_bytes"]
+    coll_total = coll.get("total", 0.0)
+    raw_flops = float(cost.get("flops", 0.0)) if cost else 0.0
+    raw_bytes = float(cost.get("bytes accessed", 0.0)) if cost else 0.0
+    mf = model_flops(cfg, cell, n_params)
+
+    bytes_model = analytic_bytes(cfg, cell, n_params, n_chips)
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = bytes_model / HBM_BW  # TPU-fused traffic model (see analytic_bytes)
+    memory_s_parsed = bytes_dev / HBM_BW  # CPU-HLO upper bound
+    coll_s = coll_total / LINK_BW
+    # XLA's CPU AllReducePromotion pass forcibly widens every bf16 all-reduce
+    # to f32 (verified: bypassing it via manual shard_map psum crashes inside
+    # that pass).  A TPU deployment all-reduces bf16, so the adjusted term
+    # halves the AR payload (other collectives already carry model dtype).
+    coll_bf16 = coll_total - 0.5 * coll.get("all-reduce", 0.0)
+    coll_s_bf16 = coll_bf16 / LINK_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s, "collective_s": coll_s}
+    dominant = max(terms, key=terms.get)
+    useful = mf / (flops_dev * n_chips) if flops_dev else None
+
+    def _mem_field(name):
+        v = getattr(mem, name, None)
+        return int(v) if v is not None else None
+
+    rec = {
+        "arch": arch,
+        "cell": cell_name,
+        "mesh": mesh_name,
+        "chips": n_chips,
+        "params": n_params,
+        "kind": cell.kind,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "hlo_flops_per_device": flops_dev,
+        "hlo_bytes_per_device": bytes_dev,
+        "analytic_bytes_per_device": bytes_model,
+        "memory_s_parsed_upper_bound": memory_s_parsed,
+        "raw_cost_analysis": {"flops": raw_flops, "bytes": raw_bytes},
+        "collective_bytes_per_device": coll,
+        "top_collectives": corrected["top_collectives"][:10],
+        "model_flops": mf,
+        "useful_flops_ratio": useful,
+        "roofline": {**terms, "collective_s_bf16adj": coll_s_bf16, "dominant": dominant},
+        "memory_analysis": {
+            "output_bytes": _mem_field("output_size_in_bytes"),
+            "temp_bytes": _mem_field("temp_size_in_bytes"),
+            "argument_bytes": _mem_field("argument_size_in_bytes"),
+            "generated_code_bytes": _mem_field("generated_code_size_in_bytes"),
+        },
+    }
+
+    if verbose:
+        print(f"== {arch} x {cell_name} x {mesh_name} ==")
+        print(f"  params={n_params/1e9:.2f}B  lower={t_lower:.1f}s compile={t_compile:.1f}s")
+        print(f"  memory_analysis: {mem}")
+        print(
+            f"  per-dev: flops={flops_dev:.3e} bytes={bytes_dev:.3e} coll={coll_total:.3e} "
+            f"(AR {coll.get('all-reduce',0):.2e} AG {coll.get('all-gather',0):.2e} "
+            f"RS {coll.get('reduce-scatter',0):.2e} A2A {coll.get('all-to-all',0):.2e} "
+            f"CP {coll.get('collective-permute',0):.2e})"
+        )
+        print(
+            f"  roofline: compute={compute_s*1e3:.2f}ms memory={memory_s*1e3:.2f}ms "
+            f"(parsed-ub {memory_s_parsed*1e3:.0f}ms) collective={coll_s*1e3:.2f}ms "
+            f"(bf16-adj {coll_s_bf16*1e3:.2f}ms) "
+            f"dominant={dominant} useful_flops_ratio={useful and round(useful, 3)}"
+        )
+
+    if save:
+        RESULTS.mkdir(parents=True, exist_ok=True)
+        suffix = "" if strategy == "megatron" else f"_{strategy}"
+        out = RESULTS / f"{arch}_{cell_name}_{mesh_name}{suffix}.json"
+        out.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--cell", type=str, default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--q-chunk", type=int, default=512)
+    ap.add_argument("--strategy", type=str, default="megatron", choices=["megatron", "zero3"])
+    args = ap.parse_args()
+
+    jobs: list[tuple[str, str, bool]] = []
+    archs = list_archs() if (args.all or not args.arch) else [args.arch]
+    for a in archs:
+        cfg = get_config(a)
+        cells = runnable_cells(cfg) if (args.all or not args.cell) else [args.cell]
+        for c in cells:
+            if args.both_meshes:
+                jobs.append((a, c, False))
+                jobs.append((a, c, True))
+            else:
+                jobs.append((a, c, args.multi_pod))
+
+    failures = []
+    for a, c, mp in jobs:
+        try:
+            run_cell(a, c, multi_pod=mp, q_chunk=args.q_chunk, strategy=args.strategy)
+        except Exception as e:  # noqa: BLE001
+            failures.append((a, c, mp, repr(e)[:300]))
+            print(f"!! FAILED {a} x {c} multi_pod={mp}: {e}", file=sys.stderr)
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", f)
+        sys.exit(1)
+    print(f"\nALL {len(jobs)} CELLS COMPILED OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,263 @@
+"""Trip-count-aware analysis of compiled (post-SPMD) HLO text.
+
+Why this exists: XLA's ``compiled.cost_analysis()`` counts each ``while``
+body ONCE — but every production model here scans over layers (and query
+chunks), so a 94-layer stack would be under-counted 94x.  This module parses
+``compiled.as_text()`` into computation blocks, recovers scan trip counts
+from each while's condition block, and walks the call graph multiplying
+per-block costs by their execution count.  It produces:
+
+  * ``flops``            — dot FLOPs (2·prod(out)·prod(contracting dims)),
+                           per device (post-SPMD shapes)
+  * ``bytes``            — Σ (operand + output bytes) over instructions,
+                           fusion-internal blocks excluded (HloCostAnalysis
+                           convention), per device
+  * ``collective_bytes`` — per kind, tensor bytes crossing links with ring
+                           factors (all-reduce 2x, others 1x), per device
+  * per-collective-op breakdown for §Perf iteration (who emitted what)
+
+Approximations (documented in EXPERIMENTS.md): condition-block trip counts
+assume scan-style ``lt(iter, N)`` bounds (true for every loop we emit);
+operand bytes for block parameters resolve through call sites where
+unambiguous, else the output-bytes term dominates anyway.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->.*\{\s*$")
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*([\w]+)\[([\d,]*)\][^\s]*\s+([\w\-]+)\("
+)
+_TUPLE_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*\(.*\)\s+([\w\-]+)\("
+)
+_PARAM = re.compile(r"%?([\w.\-]+):\s*([\w]+)\[([\d,]*)\]")
+_WHILE_REFS = re.compile(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CALLS = re.compile(r"calls=%?([\w.\-]+)")
+_TO_APPLY = re.compile(r"to_apply=%?([\w.\-]+)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERANDS = re.compile(r"\(([^)]*)\)")
+_CONST = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    dtype: str
+    dims: tuple[int, ...]
+    opcode: str
+    line: str
+
+    @property
+    def nbytes(self) -> int:
+        b = _DTYPE_BYTES.get(self.dtype, 0)
+        n = 1
+        for d in self.dims:
+            n *= d
+        return n * b
+
+
+@dataclasses.dataclass
+class Block:
+    name: str
+    instrs: list[Instr]
+    shapes: dict[str, tuple[str, tuple[int, ...]]]  # name -> (dtype, dims)
+    lines: list[str]
+    is_fusion_body: bool = False
+
+
+def _dims(s: str) -> tuple[int, ...]:
+    return tuple(int(x) for x in s.split(",") if x.strip()) if s.strip() else ()
+
+
+def parse_blocks(text: str) -> tuple[dict[str, Block], str | None]:
+    blocks: dict[str, Block] = {}
+    cur: Block | None = None
+    entry: str | None = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HDR.match(line.strip())
+            if m and "{" in line:
+                name = m.group(1)
+                cur = Block(name=name, instrs=[], shapes={}, lines=[])
+                if line.strip().startswith("ENTRY"):
+                    entry = name
+                if m.group(2):
+                    # tuple-typed params are resolved via get-tuple-element
+                    for pm in _PARAM.finditer(m.group(2)):
+                        cur.shapes[pm.group(1)] = (pm.group(2), _dims(pm.group(3)))
+            continue
+        if line.strip() == "}":
+            blocks[cur.name] = cur
+            cur = None
+            continue
+        cur.lines.append(line)
+        m = _INSTR.match(line)
+        if m:
+            ins = Instr(m.group(1), m.group(2), _dims(m.group(3)), m.group(4), line)
+            cur.instrs.append(ins)
+            cur.shapes[ins.name] = (ins.dtype, ins.dims)
+        else:
+            mt = _TUPLE_INSTR.match(line)
+            if mt:
+                ins = Instr(mt.group(1), "tuple", (), mt.group(2), line)
+                cur.instrs.append(ins)
+    return blocks, entry
+
+
+def _trip_count(cond: Block) -> int:
+    """Scan-style loops compare the iteration counter to a constant bound."""
+    consts = [int(m.group(1)) for ln in cond.lines for m in _CONST.finditer(ln)]
+    return max(consts) if consts else 1
+
+
+def _dot_flops(ins: Instr, blk: Block) -> float:
+    m = _CONTRACT.search(ins.line)
+    if not m:
+        return 0.0
+    cdims = _dims(m.group(1))
+    ops = _OPERANDS.search(ins.line.split(ins.opcode + "(", 1)[1][::-1])
+    # operand list: text between the first '(' after opcode and matching ')'
+    try:
+        args = ins.line.split(ins.opcode + "(", 1)[1]
+        args = args.split(")", 1)[0]
+        first = args.split(",")[0].strip().lstrip("%")
+    except Exception:
+        return 0.0
+    lhs = blk.shapes.get(first)
+    if lhs is None:
+        return 0.0
+    k = 1
+    for d in cdims:
+        if d < len(lhs[1]):
+            k *= lhs[1][d]
+    out = 1
+    for d in ins.dims:
+        out *= d
+    return 2.0 * out * k
+
+
+def analyze(text: str) -> dict:
+    blocks, entry = parse_blocks(text)
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+
+    # mark fusion bodies (excluded from bytes accounting)
+    for blk in blocks.values():
+        for ins in blk.instrs:
+            if ins.opcode == "fusion":
+                for m in _CALLS.finditer(ins.line):
+                    if m.group(1) in blocks:
+                        blocks[m.group(1)].is_fusion_body = True
+
+    # execution multiplier per block, from the call graph
+    mult: dict[str, float] = defaultdict(float)
+
+    def visit(name: str, m: float):
+        if name not in blocks or m == 0:
+            return
+        mult[name] += m
+        blk = blocks[name]
+        for ins in blk.instrs:
+            if ins.opcode == "while":
+                r = _WHILE_REFS.search(ins.line)
+                if r:
+                    cond, body = r.group(1), r.group(2)
+                    trips = _trip_count(blocks[cond]) if cond in blocks else 1
+                    visit(body, m * trips)
+                    visit(cond, m * (trips + 1))
+            elif ins.opcode == "fusion":
+                for c in _CALLS.finditer(ins.line):
+                    visit(c.group(1), m)
+            elif ins.opcode in ("call", "conditional", "map", "reduce", "sort", "scatter", "reduce-window", "select-and-scatter"):
+                for c in _TO_APPLY.finditer(ins.line):
+                    visit(c.group(1), m)
+
+    visit(entry, 1.0)
+
+    flops = 0.0
+    bytes_acc = 0.0
+    coll: dict[str, float] = defaultdict(float)
+    coll_ops: list[dict] = []
+
+    # ops with no real memory traffic (views / control), or whose traffic is
+    # a slice rather than their full operand (dynamic-slice / DUS ring writes)
+    NO_TRAFFIC = {
+        "tuple", "get-tuple-element", "parameter", "constant", "bitcast",
+        "while", "conditional", "call", "after-all", "iota", "partition-id",
+        "replica-id", "reshape",
+    }
+
+    def _operand_names(ins: Instr) -> list[str]:
+        args = ins.line.split(ins.opcode + "(", 1)
+        if len(args) < 2:
+            return []
+        return [a.strip().lstrip("%") for a in args[1].split(")", 1)[0].split(",") if a.strip()]
+
+    def _shape_bytes(blk: Block, name: str) -> int:
+        sh = blk.shapes.get(name)
+        if not sh:
+            return 0
+        n = 1
+        for d in sh[1]:
+            n *= d
+        return n * _DTYPE_BYTES.get(sh[0], 0)
+
+    for name, blk in blocks.items():
+        m = mult.get(name, 0.0)
+        if m == 0:
+            continue
+        for ins in blk.instrs:
+            if ins.opcode in ("dot", "convolution"):
+                flops += m * _dot_flops(ins, blk)
+            if not blk.is_fusion_body:
+                op = ins.opcode
+                if op in NO_TRAFFIC:
+                    continue
+                if op == "dynamic-slice":
+                    b = 2 * ins.nbytes  # read the slice + write it
+                elif op == "dynamic-update-slice":
+                    ops_ = _operand_names(ins)
+                    upd = _shape_bytes(blk, ops_[1]) if len(ops_) > 1 else ins.nbytes
+                    b = 3 * upd  # read update + read/write region (in-place)
+                elif op == "broadcast":
+                    ops_ = _operand_names(ins)
+                    b = ins.nbytes + (_shape_bytes(blk, ops_[0]) if ops_ else 0)
+                else:
+                    b = ins.nbytes + sum(_shape_bytes(blk, a) for a in _operand_names(ins))
+                bytes_acc += m * b
+            if ins.opcode in COLLECTIVES:
+                factor = 2.0 if ins.opcode == "all-reduce" else 1.0
+                cb = m * ins.nbytes * factor
+                coll[ins.opcode] += cb
+                coll_ops.append(
+                    {
+                        "kind": ins.opcode,
+                        "block": name,
+                        "mult": m,
+                        "tensor_bytes": ins.nbytes,
+                        "link_bytes": cb,
+                        "meta": ins.line.strip()[:160],
+                    }
+                )
+
+    coll["total"] = sum(v for k, v in coll.items() if k != "total")
+    coll_ops.sort(key=lambda o: -o["link_bytes"])
+    return {
+        "flops": flops,
+        "bytes": bytes_acc,
+        "collective_bytes": dict(coll),
+        "top_collectives": coll_ops[:20],
+        "n_blocks": len(blocks),
+    }

@@ -1,0 +1,193 @@
+"""Parameter / input / cache sharding assignment (GSPMD partition specs).
+
+Strategy (DESIGN.md §6): megatron tensor-parallel over ``model`` + ZeRO-3
+FSDP over ``data`` for every weight matrix; experts over ``model`` (EP);
+batch over (``pod``, ``data``); KV caches over kv-heads (or head_dim when
+kv-heads don't divide the axis).  Axes that don't divide a dim are dropped
+to replication, so every (arch × shape × mesh) cell lowers cleanly.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+BATCH_AXES = ("pod", "data")
+
+# final-path-name -> spec for the TRAILING dims (leading dims -> None)
+_TRAILING: dict[str, tuple] = {
+    # vocab-parallel: V over model, D replicated -> logits [B,S,V/model] stay
+    # sharded and only the [B,S] logsumexp reduces over model.  (Sharding D
+    # over data instead forces an all-reduce of FULL logits — measured 390 GB
+    # per device per step in the first dry-run; see EXPERIMENTS.md §Perf.)
+    "embed": ("model", None),
+    "unembed": ("model", None),
+    "wq": ("data", "model"),
+    "wk": ("data", "model"),
+    "wv": ("data", "model"),
+    "wo": ("model", "data"),
+    "w_gate": ("data", "model"),
+    "w_up": ("data", "model"),
+    "w_down": ("model", "data"),
+    "router": ("data", None),
+    "in_proj": ("data", "model"),
+    "out_proj": ("model", "data"),
+    "conv_w": (None, "model"),
+    "x_proj": ("model", None),
+    "dt_proj": (None, "model"),
+    "dt_bias": ("model",),
+    "A_log": ("model", None),
+    "D": ("model",),
+    "gate_norm": ("model",),
+    "bc_proj": ("data", None),
+}
+
+# expert-stacked weights (path contains "moe"): E over model, D over data
+_TRAILING_MOE: dict[str, tuple] = {
+    "w_gate": ("model", "data", None),
+    "w_up": ("model", "data", None),
+    "w_down": ("model", None, "data"),
+    "router": ("data", None),
+}
+
+
+def _axis_sizes(mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _fit(spec: tuple, shape: tuple[int, ...], sizes: dict[str, int]) -> P:
+    """Right-align the trailing spec onto shape; drop non-dividing axes."""
+    full = (None,) * (len(shape) - len(spec)) + tuple(spec)
+    out = []
+    for dim, ax in zip(shape, full):
+        if ax is None or ax not in sizes or dim % sizes[ax] != 0:
+            out.append(None)
+        else:
+            out.append(ax)
+    return P(*out)
+
+
+def param_pspec(path, leaf, sizes: dict[str, int], cfg=None) -> P:
+    names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+    last = names[-1]
+    table = _TRAILING_MOE if ("moe" in names and last in _TRAILING_MOE) else _TRAILING
+    if last in table:
+        spec = table[last]
+        # rank-aware fixups
+        if last == "A_log" and leaf.ndim - (1 if names[0] in ("layers", "tail", "enc_layers") else 0) == 1:
+            spec = ("model",)
+        if last == "D":
+            spec = ("model",)
+        # Attention TP only when the head count divides the model axis;
+        # otherwise attention runs data-parallel (weights FSDP-sharded only).
+        # GSPMD's padded fallback for uneven head shards was measured to
+        # all-gather full-batch activations (EXPERIMENTS.md §Perf iter 1).
+        if cfg is not None and "model" in sizes:
+            tp = sizes["model"]
+            if last in ("wq", "wo") and cfg.n_heads % tp != 0:
+                spec = tuple(None if a == "model" else a for a in spec)
+            if last in ("wk", "wv") and cfg.n_kv_heads % tp != 0:
+                spec = tuple(None if a == "model" else a for a in spec)
+        return _fit(spec, leaf.shape, sizes)
+    # norms and anything unknown: replicate
+    return P(*([None] * leaf.ndim))
+
+
+def shard_params(abs_params, mesh, cfg=None, strategy: str = "megatron") -> Any:
+    sizes = _axis_sizes(mesh)
+    if strategy == "zero3":
+        return jax.tree_util.tree_map_with_path(
+            lambda path, leaf: NamedSharding(mesh, _zero3_pspec(leaf, sizes)),
+            abs_params,
+        )
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, param_pspec(path, leaf, sizes, cfg)),
+        abs_params,
+    )
+
+
+def _zero3_pspec(leaf, sizes: dict[str, int]) -> P:
+    """ZeRO-3 / pure-DP: every weight fully sharded over (data x model) on its
+    largest evenly-dividing dim; gathered at use, reduce-scattered in bwd.
+    No tensor parallelism — the whole mesh acts as one DP domain."""
+    ways = sizes.get("data", 1) * sizes.get("model", 1)
+    shape = leaf.shape
+    order = sorted(range(len(shape)), key=lambda i: -shape[i])
+    for i in order:
+        if shape[i] % ways == 0:
+            spec = [None] * len(shape)
+            spec[i] = ("data", "model")
+            return P(*spec)
+    for i in order:  # fall back to data-only sharding
+        if shape[i] % sizes.get("data", 1) == 0:
+            spec = [None] * len(shape)
+            spec[i] = "data"
+            return P(*spec)
+    return P(*([None] * len(shape)))
+
+
+def batch_pspec(B: int, extra_dims: int, mesh) -> P:
+    from repro.models import flags
+
+    sizes = _axis_sizes(mesh)
+    axes = tuple(a for a in flags.batch_axes() if a in sizes)
+    n = 1
+    for a in axes:
+        n *= sizes[a]
+    if axes and B % n == 0:
+        return P(axes, *([None] * extra_dims))
+    return P(*([None] * (1 + extra_dims)))
+
+
+def shard_inputs(abs_batch, mesh) -> Any:
+    def one(leaf):
+        return NamedSharding(mesh, batch_pspec(leaf.shape[0], leaf.ndim - 1, mesh))
+
+    return jax.tree.map(one, abs_batch)
+
+
+def cache_pspec(path, leaf, mesh, ssm_version: int = 1) -> P:
+    """KV / SSM cache sharding: batch over (pod,data); heads (or head_dim)
+    over model.  Cache leaves carry 1-2 leading stack dims from the layer
+    scan; specs are right-aligned so the rank of the stack prefix is
+    irrelevant."""
+    sizes = _axis_sizes(mesh)
+    names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+    last = names[-1]
+    shape = leaf.shape
+
+    if last in ("k", "v"):
+        # [..., B, T, K, hd]
+        bspec = batch_pspec(shape[-4], 0, mesh)
+        b_ax = bspec[0] if len(bspec) else None
+        kax = "model" if shape[-2] % sizes.get("model", 1) == 0 else None
+        hax = "model" if kax is None and shape[-1] % sizes.get("model", 1) == 0 else None
+        return _fit((b_ax, None, kax, hax), shape, sizes)
+    if last in ("ssm", "tail_ssm"):
+        # mamba1 [..., B, Di, N]: shard Di; mamba2 [..., B, H, P, N]: shard H
+        trailing = 3 if ssm_version == 1 else 4
+        bdim = shape[-trailing]
+        bspec = batch_pspec(bdim, 0, mesh)
+        b_ax = bspec[0] if len(bspec) else None
+        spec = (b_ax, "model") + (None,) * (trailing - 2)
+        return _fit(spec, shape, sizes)
+    if last in ("conv", "tail_conv"):
+        # [..., B, K-1, Di]
+        bspec = batch_pspec(shape[-3], 0, mesh)
+        return _fit((bspec[0] if len(bspec) else None, None, "model"), shape, sizes)
+    return P(*([None] * leaf.ndim))
+
+
+def shard_cache(abs_cache, mesh, ssm_version: int = 1) -> Any:
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, cache_pspec(path, leaf, mesh, ssm_version)
+        ),
+        abs_cache,
+    )
+
+
+def replicated(mesh):
+    return NamedSharding(mesh, P())

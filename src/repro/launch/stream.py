@@ -1,0 +1,131 @@
+"""Production streaming driver: the whole Holon pipeline as ONE shard_map
+program over the ``data`` mesh axis — partition-per-device, batched folds,
+background sync as a lattice collective, windows emitted from the device.
+
+This is the TPU-native deployment path (DESIGN.md §3): the discrete-event
+harness in repro/runtime measures coordination behaviour; this driver is the
+dataplane that would actually run on a pod, and what bench_throughput
+measures for raw events/s.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.stream --query q7 --batches 64
+  (optionally XLA_FLAGS=--xla_force_host_platform_device_count=8 for a
+   multi-device run on CPU)
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import wcrdt as W
+from repro.streaming.events import EventBatch
+from repro.streaming.generator import NexmarkConfig, generate_log
+from repro.streaming.queries import Query, make_q1_ratio, make_q4, make_q7
+
+MAKERS = {"q4": make_q4, "q7": make_q7, "q1_ratio": make_q1_ratio}
+
+
+def build_pipeline(query: Query, mesh, sync_every: int):
+    """Returns a jitted fn: (log slice per device) -> per-window outputs.
+
+    Scans batches; every ``sync_every`` folds runs one lattice all-reduce
+    (the background sync); finally reads every completed window.
+    """
+
+    n_windows = 64
+
+    def node_fn(log: EventBatch):
+        p = jax.lax.axis_index("data")
+        # mark replica state device-varying from the start (shard_map vma)
+        vary = lambda t: jax.tree.map(lambda x: jax.lax.pvary(x, ("data",)), t)
+        shared = vary(query.init_shared())
+        local = vary(query.init_local())
+
+        def fold_one(carry, batch):
+            shared, local = carry
+            shared, local = query.fold(shared, local, batch, p)
+            return (shared, local), None
+
+        def sync_chunk(carry, chunk):
+            # sync_every folds, then one background-sync collective
+            carry, _ = jax.lax.scan(fold_one, carry, chunk)
+            shared, local = carry
+            shared = tuple(
+                W.axis_join(spec, st, "data")
+                for spec, st in zip(query.shared_specs, shared)
+            )
+            return (shared, local), None
+
+        log0 = jax.tree.map(lambda x: x[0], log)  # strip device-local lead dim
+        nb = jax.tree.leaves(log0)[0].shape[0]
+        n_outer = nb // sync_every
+        chunked = jax.tree.map(
+            lambda x: x[: n_outer * sync_every].reshape(
+                n_outer, sync_every, *x.shape[1:]
+            ),
+            log0,
+        )
+        (shared, local), _ = jax.lax.scan(sync_chunk, (shared, local), chunked)
+
+        def read(w):
+            v, ok = query.read(shared, local, w)
+            return jnp.where(ok, 1.0, 0.0), v
+
+        oks, vals = jax.vmap(read)(jnp.arange(n_windows))
+        return oks[None], vals[None]
+
+    log_specs = jax.tree.map(lambda _: P("data"), EventBatch(*([0] * 7)))
+    return jax.jit(
+        jax.shard_map(
+            node_fn,
+            mesh=mesh,
+            in_specs=(log_specs,),
+            out_specs=(P("data"), P("data")),
+        )
+    )
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--query", default="q7", choices=list(MAKERS))
+    ap.add_argument("--batches", type=int, default=64)
+    ap.add_argument("--events-per-batch", type=int, default=1024)
+    ap.add_argument("--window-len", type=int, default=1000)
+    ap.add_argument("--sync-every", type=int, default=4)
+    args = ap.parse_args(argv)
+
+    n_dev = len(jax.devices())
+    mesh = jax.make_mesh((n_dev,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    nx = NexmarkConfig(
+        num_partitions=n_dev,
+        num_batches=args.batches,
+        events_per_batch=args.events_per_batch,
+    )
+    log = generate_log(nx)
+    query = MAKERS[args.query](n_dev, window_len=args.window_len, num_slots=64)
+
+    with mesh:
+        pipe = build_pipeline(query, mesh, args.sync_every)
+        oks, vals = pipe(log)  # compile+run
+        jax.block_until_ready(oks)
+        t0 = time.time()
+        oks, vals = pipe(log)
+        jax.block_until_ready(oks)
+        dt = time.time() - t0
+
+    total_events = n_dev * args.batches * args.events_per_batch
+    done = int(np.asarray(oks).sum()) // n_dev
+    print(
+        f"devices={n_dev} events={total_events} wall={dt*1e3:.1f}ms "
+        f"throughput={total_events/dt/1e6:.2f}M ev/s complete_windows={done}"
+    )
+    return total_events / dt
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+from repro.models.lm import (
+    decode_step,
+    forward_loss,
+    init_params,
+    prefill,
+    prefill_encdec,
+    _cache_spec as cache_spec,
+)
+from repro.models.common import shard
+
+__all__ = [
+    "decode_step",
+    "forward_loss",
+    "init_params",
+    "prefill",
+    "prefill_encdec",
+    "cache_spec",
+    "shard",
+]

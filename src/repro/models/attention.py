@@ -1,0 +1,287 @@
+"""Attention: GQA with RoPE, chunked-causal training/prefill, KV-cache decode,
+sliding windows, and cross-attention (enc-dec).
+
+TPU adaptation notes (DESIGN.md §3): instead of materializing [S, S] score
+matrices (4 GB/head at 32k), training/prefill scan over query chunks — the
+live working set is one [B, H, cq, S_kv] block, VMEM-friendly and exactly the
+structure a Pallas flash kernel would tile.  With a sliding window the KV
+range per chunk is sliced, keeping FLOPs linear in S.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import apply_rope, dense_init, shard
+
+NEG = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnDims:
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_model: int
+    rope_theta: float = 10_000.0
+    sliding_window: int = 0  # 0 = full
+    causal: bool = True
+    n_heads_padded: int = 0  # 0 -> n_heads (set via flags.pad_heads for TP)
+
+    @property
+    def hp(self) -> int:
+        return self.n_heads_padded or self.n_heads
+
+    def kv_expand_idx(self) -> jnp.ndarray:
+        """Expanded-kv index map: q head h (h < H) uses kv group
+        h // (H // K); pad heads map to group 0 (masked dead anyway)."""
+        H, K = self.n_heads, self.n_kv_heads
+        idx = jnp.arange(self.hp) // max(1, H // K)
+        return jnp.minimum(idx, K - 1).astype(jnp.int32)
+
+    def head_mask(self, dtype) -> jnp.ndarray | None:
+        if self.hp == self.n_heads:
+            return None
+        return (jnp.arange(self.hp) < self.n_heads).astype(dtype)
+
+
+def init_attn(key, dims: AttnDims, dtype) -> dict:
+    ks = jax.random.split(key, 4)
+    D, Hp, K, hd = dims.d_model, dims.hp, dims.n_kv_heads, dims.head_dim
+    wq = dense_init(ks[0], (D, Hp * hd), dtype)
+    wo = dense_init(ks[3], (Hp * hd, D), dtype, fan_in=dims.n_heads * hd)
+    if Hp != dims.n_heads:
+        # pad heads are exact zeros; output-masking keeps their grads zero,
+        # so they remain zero forever — the math is the unpadded architecture
+        col = (jnp.arange(Hp * hd) // hd) < dims.n_heads
+        wq = wq * col[None, :].astype(wq.dtype)
+        wo = wo * col[:, None].astype(wo.dtype)
+    return {
+        "wq": wq,
+        "wk": dense_init(ks[1], (D, K * hd), dtype),
+        "wv": dense_init(ks[2], (D, K * hd), dtype),
+        "wo": wo,
+    }
+
+
+def _project_qkv(params, dims: AttnDims, x, positions):
+    """Project + RoPE + expand KV heads to Hp (explicit GQA replication).
+
+    The expansion makes the head axis uniformly Hp everywhere — padded to the
+    TP degree when needed (flags.py) — so tensor parallelism is one clean
+    shard of that axis.  The expanded kv costs [B,T,Hp/tp,hd] per device,
+    which is what a megatron GQA shard holds anyway.
+    """
+    B, S, _ = x.shape
+    K, hd, Hp = dims.n_kv_heads, dims.head_dim, dims.hp
+    q = (x @ params["wq"]).reshape(B, S, Hp, hd)
+    k = (x @ params["wk"]).reshape(B, S, K, hd)
+    v = (x @ params["wv"]).reshape(B, S, K, hd)
+    q = apply_rope(q, positions, dims.rope_theta)
+    k = apply_rope(k, positions, dims.rope_theta)
+    idx = dims.kv_expand_idx()
+    k = jnp.take(k, idx, axis=2)
+    v = jnp.take(v, idx, axis=2)
+    q = shard(q, ("pod", "data"), None, "model", None)
+    k = shard(k, ("pod", "data"), None, "model", None)
+    v = shard(v, ("pod", "data"), None, "model", None)
+    return q, k, v
+
+
+def _mask_pad_heads(o, dims: AttnDims):
+    """Zero the pad heads' outputs so wo's pad rows stay zero-gradient."""
+    m = dims.head_mask(o.dtype)
+    return o if m is None else o * m[None, None, :, None]
+
+
+def _gqa_scores(q, k):  # q:[B,cq,H,hd] k:[B,T,H,hd] -> [B,H,cq,T]
+    hd = q.shape[-1]
+    s = jnp.einsum("bqhd,bthd->bhqt", q, k) / math.sqrt(hd)
+    return s
+
+
+def _gqa_out(p, v):  # p:[B,H,cq,T] v:[B,T,H,hd] -> [B,cq,H,hd]
+    return jnp.einsum("bhqt,bthd->bqhd", p, v)
+
+
+def attend_chunked(
+    q: jax.Array,  # [B, S, H, hd] (RoPE applied)
+    k: jax.Array,  # [B, T, K, hd]
+    v: jax.Array,  # [B, T, K, hd]
+    *,
+    causal: bool,
+    sliding_window: int = 0,
+    q_chunk: int = 512,
+    q_offset: int = 0,  # absolute position of q[0] (prefill continuation)
+) -> jax.Array:
+    """Scan over query chunks; each chunk sees only its legal KV range.
+
+    Full-causal: chunk i attends kv[: (i+1)*cq + q_offset] — realized with a
+    dynamic slice to ``hi`` rounded up to a chunk multiple, plus masking.
+    Sliding window: kv range is a fixed-width slice around the chunk, so both
+    memory AND FLOPs are O(S·w) instead of O(S²).
+    """
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    cq = min(q_chunk, S)
+    if S % cq != 0:  # fall back to the largest chunk that divides S
+        cq = math.gcd(S, cq)
+    n = S // cq
+
+    q_c = q.reshape(B, n, cq, H, hd).transpose(1, 0, 2, 3, 4)  # [n,B,cq,H,hd]
+
+    if sliding_window and causal:
+        w = sliding_window
+        kv_span = min(T, ((w + cq + cq - 1) // cq) * cq)  # window + chunk, padded
+
+        def body(_, xs):
+            i, qb = xs
+            q_abs0 = q_offset + i * cq
+            lo = jnp.maximum(0, q_abs0 + cq - kv_span)
+            kb = jax.lax.dynamic_slice_in_dim(k, lo, kv_span, axis=1)
+            vb = jax.lax.dynamic_slice_in_dim(v, lo, kv_span, axis=1)
+            s = _gqa_scores(qb, kb)  # [B,H,cq,kv_span]
+            qpos = q_abs0 + jnp.arange(cq)
+            kpos = lo + jnp.arange(kv_span)
+            ok = (kpos[None, :] <= qpos[:, None]) & (
+                kpos[None, :] > qpos[:, None] - w
+            )
+            s = jnp.where(ok[None, None], s, NEG)
+            p = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(q.dtype)
+            return None, _gqa_out(p, vb)
+
+        _, o = jax.lax.scan(body, None, (jnp.arange(n), q_c))
+    else:
+
+        def body(_, xs):
+            i, qb = xs
+            if causal:
+                hi_static = T  # slice bound must be static inside scan; mask
+                kb, vb = k, v
+            else:
+                kb, vb = k, v
+            s = _gqa_scores(qb, kb)
+            if causal:
+                qpos = q_offset + i * cq + jnp.arange(cq)
+                kpos = jnp.arange(T)
+                ok = kpos[None, :] <= qpos[:, None]
+                s = jnp.where(ok[None, None], s, NEG)
+            p = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(q.dtype)
+            return None, _gqa_out(p, vb)
+
+        _, o = jax.lax.scan(body, None, (jnp.arange(n), q_c))
+
+    return o.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd)
+
+
+# --------------------------------------------------------------------------
+# public ops
+# --------------------------------------------------------------------------
+
+
+def attn_train(params, dims: AttnDims, x, *, q_chunk: int = 512):
+    """Self-attention over a full sequence (training / encoder)."""
+    B, S, _ = x.shape
+    pos = jnp.arange(S)[None, :]
+    q, k, v = _project_qkv(params, dims, x, pos)
+    o = attend_chunked(
+        q, k, v, causal=dims.causal, sliding_window=dims.sliding_window,
+        q_chunk=q_chunk,
+    )
+    o = _mask_pad_heads(o, dims)
+    o = o.reshape(B, S, dims.hp * dims.head_dim)
+    return o @ params["wo"]
+
+
+def attn_prefill(params, dims: AttnDims, x, *, q_chunk: int = 512):
+    """Causal self-attention that also returns the KV cache."""
+    B, S, _ = x.shape
+    pos = jnp.arange(S)[None, :]
+    q, k, v = _project_qkv(params, dims, x, pos)
+    o = attend_chunked(
+        q, k, v, causal=True, sliding_window=dims.sliding_window, q_chunk=q_chunk
+    )
+    o = _mask_pad_heads(o, dims)
+    o = o.reshape(B, S, dims.hp * dims.head_dim)
+    return o @ params["wo"], {"k": k, "v": v}
+
+
+def attn_decode(params, dims: AttnDims, x, cache, position):
+    """One-token decode against a fixed-size KV cache.
+
+    cache: {"k": [B, T, K, hd], "v": ...}; ``position`` is the index of the
+    new token (ring-written).  Returns (out [B,1,D], new cache).
+    """
+    B, _, _ = x.shape
+    K, hd, Hp = dims.n_kv_heads, dims.head_dim, dims.hp
+    pos = jnp.full((B, 1), position, jnp.int32)
+    # decode 2D plan: contract D over `data` in place of FSDP weight gathers
+    # (EXPERIMENTS.md §Perf iteration B); projections psum tiny activations.
+    x = shard(x, None, None, ("data",))
+    q = (x @ params["wq"]).reshape(B, 1, Hp, hd)
+    k_new = (x @ params["wk"]).reshape(B, 1, K, hd)
+    v_new = (x @ params["wv"]).reshape(B, 1, K, hd)
+    q = shard(q, ("pod", "data"), None, "model", None)
+    q = apply_rope(q, pos, dims.rope_theta)
+    k_new = apply_rope(k_new, pos, dims.rope_theta)
+    # cache stores Hp expanded heads (aligned with the TP head shard); the
+    # Hp/K memory amplification for low-kv archs is a known trade-off tracked
+    # in EXPERIMENTS.md §Perf (grouped-KV decode removes it).
+    idx = dims.kv_expand_idx()
+    k_new = jnp.take(k_new, idx, axis=2)
+    v_new = jnp.take(v_new, idx, axis=2)
+
+    T = cache["k"].shape[1]
+    slot = position % T
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, slot, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, slot, axis=1)
+
+    s = _gqa_scores(q, ck)  # [B,H,1,T]
+    kpos = jnp.arange(T)
+    visible = kpos[None, None, None, :] <= position
+    # ring semantics: when the cache is exactly the window (T <= w) every
+    # resident slot is in-window by construction; only a larger cache needs
+    # the explicit sliding mask.
+    if dims.sliding_window and T > dims.sliding_window:
+        visible &= kpos[None, None, None, :] > position - dims.sliding_window
+    s = jnp.where(visible, s, NEG)
+    p = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(x.dtype)
+    o = _mask_pad_heads(_gqa_out(p, cv), dims).reshape(B, 1, Hp * hd)
+    o = shard(o, None, None, "model")
+    out = o @ params["wo"]
+    return shard(out, None, None, ("data",)), {"k": ck, "v": cv}
+
+
+def attn_cross(params, dims: AttnDims, x, enc_kv, *, q_chunk: int = 512):
+    """Cross-attention (decoder over encoder KV, non-causal)."""
+    B, S, _ = x.shape
+    Hp, hd = dims.hp, dims.head_dim
+    q = (x @ params["wq"]).reshape(B, S, Hp, hd)  # no RoPE on cross-attn
+    q = shard(q, ("pod", "data"), None, "model", None)
+    o = attend_chunked(q, enc_kv["k"], enc_kv["v"], causal=False, q_chunk=q_chunk)
+    o = _mask_pad_heads(o, dims)
+    o = o.reshape(B, S, Hp * hd)
+    return o @ params["wo"]
+
+
+def cross_kv(params, dims: AttnDims, enc_out):
+    B, T, _ = enc_out.shape
+    K, hd = dims.n_kv_heads, dims.head_dim
+    k = (enc_out @ params["wk"]).reshape(B, T, K, hd)
+    v = (enc_out @ params["wv"]).reshape(B, T, K, hd)
+    idx = dims.kv_expand_idx()
+    return {
+        "k": shard(jnp.take(k, idx, axis=2), ("pod", "data"), None, "model", None),
+        "v": shard(jnp.take(v, idx, axis=2), ("pod", "data"), None, "model", None),
+    }
+
+
+def init_cache(dims: AttnDims, B: int, T: int, dtype) -> dict:
+    Hp, hd = dims.hp, dims.head_dim
+    return {
+        "k": jnp.zeros((B, T, Hp, hd), dtype),
+        "v": jnp.zeros((B, T, Hp, hd), dtype),
+    }

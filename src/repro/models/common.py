@@ -1,0 +1,198 @@
+"""Shared model building blocks: norms, RoPE, embeddings, init, sharding.
+
+Parameters are plain nested dicts of jax.Arrays.  Layers of a homogeneous
+stack are *stacked* along a leading ``[L]`` axis and consumed by
+``jax.lax.scan`` — this keeps HLO size O(1) in depth, which is what makes
+88-to-94-layer configs compile quickly in the 512-device dry-run.
+
+Sharding: model code annotates activations with
+``jax.lax.with_sharding_constraint`` through :func:`shard`; outside a mesh
+context the helper is a no-op, so smoke tests run unchanged on one CPU
+device.  Parameter shardings are assigned by ``launch/shardings.py``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+# --------------------------------------------------------------------------
+# sharding helper: constraint-if-mesh
+# --------------------------------------------------------------------------
+
+
+def _cur_mesh():
+    m = jax.sharding.get_abstract_mesh()
+    if m is not None and not m.empty:
+        return m
+    try:  # legacy `with mesh:` context (what launch/dryrun.py uses)
+        from jax._src import mesh as mesh_lib
+
+        pm = mesh_lib.thread_resources.env.physical_mesh
+        if pm is not None and not pm.empty:
+            return pm
+    except Exception:
+        pass
+    return None
+
+
+def shard(x: jax.Array, *spec) -> jax.Array:
+    """with_sharding_constraint(x, P(*spec)) under a mesh; no-op otherwise.
+
+    Two cleanups make one model code path serve every (arch × mesh) cell:
+    * axis names absent from the current mesh are dropped (single-pod vs
+      multi-pod), and
+    * axes that do not evenly divide their dim are dropped (e.g. 24 heads on
+      a 16-way model axis fall back to replication instead of GSPMD padding,
+      which was measured to trigger full-batch all-gathers — EXPERIMENTS.md
+      §Perf iteration 1).
+    """
+    mesh = _cur_mesh()
+    if mesh is None:
+        return x
+    try:
+        sizes = dict(mesh.shape)  # Mesh.shape is an OrderedDict name->size
+    except Exception:
+        sizes = dict(zip(mesh.axis_names, mesh.shape))
+
+    # the canonical batch tuple routes through the strategy flag (ZeRO-3
+    # folds `model` into the batch axes)
+    from repro.models import flags
+
+    spec = tuple(
+        flags.batch_axes() if (isinstance(e, tuple) and set(e) == {"pod", "data"}) else e
+        for e in spec
+    )
+
+    used: set = set()
+
+    def keep(e, dim):
+        if e is None:
+            return None
+        if isinstance(e, (tuple, list)):
+            kept, prod = [], 1
+            for a in e:
+                if a in sizes and a not in used:
+                    kept.append(a)
+                    prod *= sizes[a]
+            if kept and dim % prod == 0:
+                used.update(kept)
+                return tuple(kept)
+            return None
+        if e in sizes and e not in used and dim % sizes[e] == 0:
+            used.add(e)
+            return e
+        return None
+
+    cleaned = [keep(e, d) for e, d in zip(spec, x.shape)]
+    return jax.lax.with_sharding_constraint(x, P(*cleaned))
+
+
+BATCH = ("pod", "data")  # batch shards over pod+data axes when present
+
+
+# --------------------------------------------------------------------------
+# initializers
+# --------------------------------------------------------------------------
+
+
+def dense_init(key, shape, dtype, fan_in: int | None = None):
+    fan = fan_in if fan_in is not None else shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.maximum(fan, 1)).astype(jnp.float32)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    """RMSNorm with fp32 *reduction* but a bf16 data path.
+
+    Upcasting the whole tensor (the textbook form) made XLA hoist the
+    f32 convert across the tensor-parallel all-reduces, doubling every
+    activation collective (EXPERIMENTS.md §Perf iteration A1).  Keeping x in
+    its own dtype and broadcasting the f32 rsqrt keeps the TP psums bf16;
+    only the variance reduction runs in f32.
+    """
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv * (1.0 + scale).astype(x.dtype)
+
+
+def init_rmsnorm(d: int, dtype) -> jax.Array:
+    return jnp.zeros((d,), dtype)  # stored as (scale - 1)
+
+
+# --------------------------------------------------------------------------
+# rotary position embeddings
+# --------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, hd]; positions: broadcastable to [..., S]."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # [hd/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    sin = jnp.sin(ang)[..., None, :]  # [..., S, 1, hd/2]
+    cos = jnp.cos(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# embedding / unembedding with chunked softmax-xent (vocab can be 256k)
+# --------------------------------------------------------------------------
+
+
+def embed(tokens: jax.Array, table: jax.Array) -> jax.Array:
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed_loss(
+    h: jax.Array,  # [B, S, D]
+    table: jax.Array,  # [V, D]
+    labels: jax.Array,  # [B, S]
+    mask: jax.Array | None = None,  # [B, S]
+    chunk: int = 1024,
+) -> jax.Array:
+    """Mean next-token cross-entropy, computed in sequence chunks so the
+    [B, chunk, V] logits block (not [B, S, V]) is the live working set."""
+    B, S, D = h.shape
+    n_chunks = max(1, S // chunk)
+    chunk = S // n_chunks
+    assert n_chunks * chunk == S, f"seq {S} not divisible into {n_chunks} chunks"
+    h_c = h.reshape(B, n_chunks, chunk, D).transpose(1, 0, 2, 3)
+    y_c = labels.reshape(B, n_chunks, chunk).transpose(1, 0, 2)
+    m_c = (
+        mask.reshape(B, n_chunks, chunk).transpose(1, 0, 2)
+        if mask is not None
+        else jnp.ones((n_chunks, B, chunk), jnp.float32)
+    )
+
+    def body(carry, xs):
+        hb, yb, mb = xs
+        logits = jnp.einsum("bsd,vd->bsv", hb, table).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, yb[..., None], axis=-1)[..., 0]
+        nll = (logz - gold) * mb.astype(jnp.float32)
+        return (carry[0] + jnp.sum(nll), carry[1] + jnp.sum(mb)), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)), (h_c, y_c, m_c))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def unembed_logits(h: jax.Array, table: jax.Array) -> jax.Array:
+    return jnp.einsum("...d,vd->...v", h, table)

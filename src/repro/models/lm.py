@@ -1,0 +1,704 @@
+"""Model assembly: every assigned architecture as init / train-forward /
+prefill / decode, built from the layer library.
+
+Families:
+  dense / vlm        : decoder-only transformer (GQA + SwiGLU); vlm prepends a
+                       stub patch-embedding prefix to the token embeddings.
+  moe                : same skeleton, FFN replaced by MoE every
+                       ``moe_every``-th layer (macro-layer scan keeps the
+                       stack homogeneous for lax.scan).
+  ssm                : pure Mamba1 stack (attention-free).
+  hybrid             : Mamba2 stack with ONE shared-weight attention block
+                       applied after every ``hybrid_attn_every`` mamba layers
+                       (zamba2); macro-scan of [every x mamba + shared attn],
+                       plus an unscanned tail of mamba layers.
+  audio (enc-dec)    : bidirectional encoder over stub frame embeddings +
+                       causal decoder with cross-attention (seamless).
+
+All stacks scan over layers with stacked params (HLO depth O(1)) and
+``jax.checkpoint`` on the layer body for training.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.attention import AttnDims
+from repro.models.common import (
+    BATCH,
+    embed,
+    embed_init,
+    init_rmsnorm,
+    rmsnorm,
+    shard,
+    unembed_logits,
+    unembed_loss,
+)
+from repro.models.mlp import init_mlp, mlp_ffn
+from repro.models.moe import MoEDims
+from repro.models.ssm import SSMDims
+
+
+# --------------------------------------------------------------------------
+# dims helpers
+# --------------------------------------------------------------------------
+
+
+def attn_dims(cfg: ArchConfig, causal: bool = True, sliding: int | None = None) -> AttnDims:
+    from repro.models import flags
+
+    return AttnDims(
+        n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.head_dim,
+        d_model=cfg.d_model,
+        rope_theta=cfg.rope_theta,
+        sliding_window=cfg.sliding_window if sliding is None else sliding,
+        causal=causal,
+        n_heads_padded=flags.pad_heads(cfg.n_heads),
+    )
+
+
+def moe_dims(cfg: ArchConfig) -> MoEDims:
+    return MoEDims(
+        d_model=cfg.d_model,
+        n_experts=cfg.moe_experts,
+        top_k=cfg.moe_top_k,
+        d_ff=cfg.moe_d_ff or cfg.d_ff,
+        capacity_factor=cfg.capacity_factor,
+        shared_expert=cfg.moe_shared_expert,
+        shared_d_ff=cfg.d_ff,
+    )
+
+
+def ssm_dims(cfg: ArchConfig) -> SSMDims:
+    return SSMDims(
+        d_model=cfg.d_model,
+        d_state=cfg.ssm_state,
+        d_conv=cfg.ssm_conv,
+        expand=cfg.ssm_expand,
+        version=cfg.ssm_version,
+        n_heads=cfg.ssm_heads,
+    )
+
+
+# --------------------------------------------------------------------------
+# single blocks
+# --------------------------------------------------------------------------
+
+
+def init_dense_block(key, cfg: ArchConfig, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": init_rmsnorm(cfg.d_model, dtype),
+        "attn": attn.init_attn(k1, attn_dims(cfg), dtype),
+        "ln2": init_rmsnorm(cfg.d_model, dtype),
+        "mlp": init_mlp(k2, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def dense_block(p, cfg: ArchConfig, h, *, q_chunk=512):
+    h = h + attn.attn_train(p["attn"], attn_dims(cfg), rmsnorm(h, p["ln1"], cfg.norm_eps), q_chunk=q_chunk)
+    h = h + mlp_ffn(p["mlp"], rmsnorm(h, p["ln2"], cfg.norm_eps))
+    return h
+
+
+def init_moe_block(key, cfg: ArchConfig, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": init_rmsnorm(cfg.d_model, dtype),
+        "attn": attn.init_attn(k1, attn_dims(cfg), dtype),
+        "ln2": init_rmsnorm(cfg.d_model, dtype),
+        "moe": moe_lib.init_moe(k2, moe_dims(cfg), dtype),
+    }
+
+
+def moe_block(p, cfg: ArchConfig, h, *, q_chunk=512):
+    h = h + attn.attn_train(p["attn"], attn_dims(cfg), rmsnorm(h, p["ln1"], cfg.norm_eps), q_chunk=q_chunk)
+    h = h + moe_lib.moe_ffn(p["moe"], moe_dims(cfg), rmsnorm(h, p["ln2"], cfg.norm_eps))
+    return h
+
+
+def init_mamba_block(key, cfg: ArchConfig, dtype) -> dict:
+    return {
+        "ln": init_rmsnorm(cfg.d_model, dtype),
+        "mamba": ssm_lib.init_mamba(key, ssm_dims(cfg), dtype),
+    }
+
+
+def mamba_block(p, cfg: ArchConfig, h, state=None, conv=None, chunk=256):
+    y, st = ssm_lib.mamba_forward(
+        p["mamba"], ssm_dims(cfg), rmsnorm(h, p["ln"], cfg.norm_eps),
+        state=state, conv_prev=conv, chunk=chunk,
+    )
+    return h + y, st
+
+
+# --------------------------------------------------------------------------
+# parameter init for the whole model
+# --------------------------------------------------------------------------
+
+
+def _stacked(init_fn, key, n: int):
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+def init_params(cfg: ArchConfig, key, dtype=jnp.bfloat16) -> dict:
+    ks = jax.random.split(key, 8)
+    p: dict[str, Any] = {
+        "embed": embed_init(ks[0], (cfg.vocab, cfg.d_model), dtype),
+        "final_norm": init_rmsnorm(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = embed_init(ks[1], (cfg.vocab, cfg.d_model), dtype)
+
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        p["layers"] = _stacked(lambda k: init_dense_block(k, cfg, dtype), ks[2], cfg.n_layers)
+    elif fam == "moe":
+        every = cfg.moe_every
+        n_macro = cfg.n_layers // every
+        if every == 1:
+            p["layers"] = _stacked(lambda k: init_moe_block(k, cfg, dtype), ks[2], n_macro)
+        else:
+            # macro layer = (every-1) dense + 1 moe
+            p["layers"] = _stacked(
+                lambda k: {
+                    "dense": _stacked(
+                        lambda kk: init_dense_block(kk, cfg, dtype), k, every - 1
+                    ),
+                    "moe": init_moe_block(jax.random.fold_in(k, 7), cfg, dtype),
+                },
+                ks[2],
+                n_macro,
+            )
+    elif fam == "ssm":
+        p["layers"] = _stacked(lambda k: init_mamba_block(k, cfg, dtype), ks[2], cfg.n_layers)
+    elif fam == "hybrid":
+        every = cfg.hybrid_attn_every
+        n_macro = cfg.n_layers // every
+        tail = cfg.n_layers % every
+        p["layers"] = _stacked(
+            lambda k: _stacked(lambda kk: init_mamba_block(kk, cfg, dtype), k, every),
+            ks[2],
+            n_macro,
+        )
+        if tail:
+            p["tail"] = _stacked(lambda k: init_mamba_block(k, cfg, dtype), ks[3], tail)
+        p["shared_attn"] = {
+            "ln": init_rmsnorm(cfg.d_model, dtype),
+            "attn": attn.init_attn(ks[4], attn_dims(cfg), dtype),
+            "ln2": init_rmsnorm(cfg.d_model, dtype),
+            "mlp": init_mlp(ks[5], cfg.d_model, cfg.d_ff, dtype),
+        }
+    elif fam == "audio":  # encoder-decoder
+        p["enc_layers"] = _stacked(
+            lambda k: {
+                "ln1": init_rmsnorm(cfg.d_model, dtype),
+                "attn": attn.init_attn(k, attn_dims(cfg, causal=False), dtype),
+                "ln2": init_rmsnorm(cfg.d_model, dtype),
+                "mlp": init_mlp(jax.random.fold_in(k, 3), cfg.d_model, cfg.d_ff, dtype),
+            },
+            ks[2],
+            cfg.enc_layers,
+        )
+        p["enc_norm"] = init_rmsnorm(cfg.d_model, dtype)
+        p["layers"] = _stacked(
+            lambda k: {
+                "ln1": init_rmsnorm(cfg.d_model, dtype),
+                "attn": attn.init_attn(k, attn_dims(cfg), dtype),
+                "lnx": init_rmsnorm(cfg.d_model, dtype),
+                "xattn": attn.init_attn(jax.random.fold_in(k, 5), attn_dims(cfg, causal=False), dtype),
+                "ln2": init_rmsnorm(cfg.d_model, dtype),
+                "mlp": init_mlp(jax.random.fold_in(k, 3), cfg.d_model, cfg.d_ff, dtype),
+            },
+            ks[3],
+            cfg.dec_layers,
+        )
+    else:
+        raise ValueError(fam)
+    return p
+
+
+# --------------------------------------------------------------------------
+# forward (training / scoring): tokens -> loss
+# --------------------------------------------------------------------------
+
+
+def _scan_layers(stack_params, body, h, remat: bool = True):
+    fn = jax.checkpoint(body) if remat else body
+
+    def step(carry, p_l):
+        return fn(carry, p_l), None
+
+    h, _ = jax.lax.scan(step, h, stack_params)
+    return h
+
+
+def _decoder_stack(cfg: ArchConfig, params, h, *, q_chunk=512, ssm_chunk=256, remat=True):
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        h = _scan_layers(
+            params["layers"], lambda hh, p: dense_block(p, cfg, hh, q_chunk=q_chunk), h, remat
+        )
+    elif fam == "moe":
+        if cfg.moe_every == 1:
+            h = _scan_layers(
+                params["layers"], lambda hh, p: moe_block(p, cfg, hh, q_chunk=q_chunk), h, remat
+            )
+        else:
+
+            def macro(hh, p):
+                def inner(h2, pd):
+                    return dense_block(pd, cfg, h2, q_chunk=q_chunk), None
+
+                hh, _ = jax.lax.scan(inner, hh, p["dense"])
+                return moe_block(p["moe"], cfg, hh, q_chunk=q_chunk)
+
+            h = _scan_layers(params["layers"], macro, h, remat)
+    elif fam == "ssm":
+
+        def body(hh, p):
+            out, _ = mamba_block(p, cfg, hh, chunk=ssm_chunk)
+            return out
+
+        h = _scan_layers(params["layers"], body, h, remat)
+    elif fam == "hybrid":
+        shared = params["shared_attn"]
+
+        def macro(hh, p):
+            def inner(h2, pm):
+                out, _ = mamba_block(pm, cfg, h2, chunk=ssm_chunk)
+                return out, None
+
+            hh, _ = jax.lax.scan(inner, hh, p)
+            hh = hh + attn.attn_train(
+                shared["attn"], attn_dims(cfg), rmsnorm(hh, shared["ln"], cfg.norm_eps),
+                q_chunk=q_chunk,
+            )
+            hh = hh + mlp_ffn(shared["mlp"], rmsnorm(hh, shared["ln2"], cfg.norm_eps))
+            return hh
+
+        h = _scan_layers(params["layers"], macro, h, remat)
+        if "tail" in params:
+
+            def tail_body(hh, p):
+                out, _ = mamba_block(p, cfg, hh, chunk=ssm_chunk)
+                return out
+
+            h = _scan_layers(params["tail"], tail_body, h, remat)
+    else:
+        raise ValueError(fam)
+    return h
+
+
+def forward_loss(
+    cfg: ArchConfig,
+    params,
+    batch: dict,
+    *,
+    q_chunk: int = 512,
+    ssm_chunk: int = 256,
+    remat: bool = True,
+) -> jax.Array:
+    """batch: tokens [B, S_txt] (+ prefix_embeds / enc_embeds per family).
+    Returns mean next-token NLL (plus MoE aux loss where applicable)."""
+    tokens = batch["tokens"]
+    B, S_txt = tokens.shape
+    tokens = shard(tokens, BATCH, None)
+
+    if cfg.is_enc_dec:
+        enc_h = shard(batch["enc_embeds"].astype(params["embed"].dtype), BATCH, None, None)
+
+        def enc_body(hh, p):
+            hh = hh + attn.attn_train(
+                p["attn"], attn_dims(cfg, causal=False), rmsnorm(hh, p["ln1"], cfg.norm_eps),
+                q_chunk=q_chunk,
+            )
+            return hh + mlp_ffn(p["mlp"], rmsnorm(hh, p["ln2"], cfg.norm_eps))
+
+        enc_h = _scan_layers(params["enc_layers"], enc_body, enc_h, remat)
+        enc_h = rmsnorm(enc_h, params["enc_norm"], cfg.norm_eps)
+
+        h = embed(tokens, params["embed"])
+        h = shard(h, BATCH, None, None)
+        xdims = attn_dims(cfg, causal=False)
+
+        def dec_body(hh, p):
+            hh = hh + attn.attn_train(
+                p["attn"], attn_dims(cfg), rmsnorm(hh, p["ln1"], cfg.norm_eps), q_chunk=q_chunk
+            )
+            kv = attn.cross_kv(p["xattn"], xdims, enc_h)
+            hh = hh + attn.attn_cross(
+                p["xattn"], xdims, rmsnorm(hh, p["lnx"], cfg.norm_eps), kv, q_chunk=q_chunk
+            )
+            return hh + mlp_ffn(p["mlp"], rmsnorm(hh, p["ln2"], cfg.norm_eps))
+
+        h = _scan_layers(params["layers"], dec_body, h, remat)
+        loss_tokens, loss_mask = tokens, None
+    else:
+        h = embed(tokens, params["embed"])
+        if cfg.frontend == "vision" and "prefix_embeds" in batch:
+            pre = batch["prefix_embeds"].astype(h.dtype)  # [B, P, D]
+            h = jnp.concatenate([pre, h], axis=1)
+        h = shard(h, BATCH, None, None)
+        h = _decoder_stack(cfg, params, h, q_chunk=q_chunk, ssm_chunk=ssm_chunk, remat=remat)
+        if cfg.frontend == "vision" and "prefix_embeds" in batch:
+            h = h[:, batch["prefix_embeds"].shape[1] :]
+        loss_tokens, loss_mask = tokens, None
+
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    # next-token: predict t+1 from t
+    labels = jnp.concatenate([loss_tokens[:, 1:], loss_tokens[:, -1:]], axis=1)
+    mask = jnp.ones_like(labels, jnp.float32).at[:, -1].set(0.0)
+    return unembed_loss(h, table, labels, mask)
+
+
+# --------------------------------------------------------------------------
+# prefill / decode (serving)
+# --------------------------------------------------------------------------
+
+
+def _cache_spec(cfg: ArchConfig, B: int, T: int, dtype):
+    """Initial cache pytree (stacked over scan dim like the params)."""
+    fam = cfg.family
+    if fam in ("dense", "vlm", "moe"):
+        n_stack = cfg.n_layers if fam != "moe" else cfg.n_layers // cfg.moe_every
+        d = attn_dims(cfg)
+
+        def one(_):
+            c = attn.init_cache(d, B, T, dtype)
+            if fam == "moe" and cfg.moe_every > 1:
+                return {
+                    "dense": jax.tree.map(
+                        lambda x: jnp.broadcast_to(x, (cfg.moe_every - 1, *x.shape)),
+                        attn.init_cache(d, B, T, dtype),
+                    ),
+                    "moe": c,
+                }
+            return c
+
+        caches = one(None)
+        return jax.tree.map(lambda x: jnp.zeros((n_stack, *x.shape), x.dtype), caches)
+    if fam == "ssm":
+        h, conv = ssm_lib.init_ssm_state(ssm_dims(cfg), B, dtype)
+        return {
+            "ssm": jnp.zeros((cfg.n_layers, *h.shape), h.dtype),
+            "conv": jnp.zeros((cfg.n_layers, *conv.shape), conv.dtype),
+        }
+    if fam == "hybrid":
+        every = cfg.hybrid_attn_every
+        n_macro = cfg.n_layers // every
+        tail = cfg.n_layers % every
+        hh, conv = ssm_lib.init_ssm_state(ssm_dims(cfg), B, dtype)
+        d = attn_dims(cfg, sliding=cfg.long_context_window if T > 65536 else cfg.sliding_window)
+        kv_T = min(T, cfg.long_context_window) if T > 65536 else T
+        out = {
+            "ssm": jnp.zeros((n_macro, every, *hh.shape), hh.dtype),
+            "conv": jnp.zeros((n_macro, every, *conv.shape), conv.dtype),
+            "kv": jax.tree.map(
+                lambda x: jnp.zeros((n_macro, *x.shape), x.dtype),
+                attn.init_cache(d, B, kv_T, dtype),
+            ),
+        }
+        if tail:
+            out["tail_ssm"] = jnp.zeros((tail, *hh.shape), hh.dtype)
+            out["tail_conv"] = jnp.zeros((tail, *conv.shape), conv.dtype)
+        return out
+    if fam == "audio":
+        d = attn_dims(cfg)
+        self_kv = jax.tree.map(
+            lambda x: jnp.zeros((cfg.dec_layers, *x.shape), x.dtype),
+            attn.init_cache(d, B, T, dtype),
+        )
+        return {"self": self_kv}  # cross-KV computed at prefill, carried separately
+    raise ValueError(fam)
+
+
+def decode_step(
+    cfg: ArchConfig, params, cache, token: jax.Array, position, *, enc_kv=None
+):
+    """One-token serve step.  token: [B, 1] int32; returns (logits, cache)."""
+    dtype = params["embed"].dtype
+    h = embed(token, params["embed"])
+    h = shard(h, BATCH, None, None)
+    fam = cfg.family
+
+    if fam in ("dense", "vlm"):
+
+        def body(hh, xs):
+            p, c = xs
+            a, nc = attn.attn_decode(
+                p["attn"], attn_dims(cfg), rmsnorm(hh, p["ln1"], cfg.norm_eps), c, position
+            )
+            hh = hh + a
+            hh = hh + mlp_ffn(p["mlp"], rmsnorm(hh, p["ln2"], cfg.norm_eps))
+            return hh, nc
+
+        h, new_cache = jax.lax.scan(body, h, (params["layers"], cache))
+    elif fam == "moe":
+        if cfg.moe_every == 1:
+
+            def body(hh, xs):
+                p, c = xs
+                a, nc = attn.attn_decode(
+                    p["attn"], attn_dims(cfg), rmsnorm(hh, p["ln1"], cfg.norm_eps), c, position
+                )
+                hh = hh + a
+                hh = hh + moe_lib.moe_ffn(
+                    p["moe"], moe_dims(cfg), rmsnorm(hh, p["ln2"], cfg.norm_eps)
+                )
+                return hh, nc
+
+            h, new_cache = jax.lax.scan(body, h, (params["layers"], cache))
+        else:
+
+            def macro(hh, xs):
+                p, c = xs
+
+                def inner(h2, xs2):
+                    pd, cd = xs2
+                    a, nc = attn.attn_decode(
+                        pd["attn"], attn_dims(cfg), rmsnorm(h2, pd["ln1"], cfg.norm_eps), cd, position
+                    )
+                    h2 = h2 + a
+                    h2 = h2 + mlp_ffn(pd["mlp"], rmsnorm(h2, pd["ln2"], cfg.norm_eps))
+                    return h2, nc
+
+                hh, ncd = jax.lax.scan(inner, hh, (p["dense"], c["dense"]))
+                a, ncm = attn.attn_decode(
+                    p["moe"]["attn"], attn_dims(cfg), rmsnorm(hh, p["moe"]["ln1"], cfg.norm_eps),
+                    c["moe"], position,
+                )
+                hh = hh + a
+                hh = hh + moe_lib.moe_ffn(
+                    p["moe"]["moe"], moe_dims(cfg), rmsnorm(hh, p["moe"]["ln2"], cfg.norm_eps)
+                )
+                return hh, {"dense": ncd, "moe": ncm}
+
+            h, new_cache = jax.lax.scan(macro, h, (params["layers"], cache))
+    elif fam == "ssm":
+
+        def body(hh, xs):
+            p, (st, cv) = xs
+            out, (nst, ncv) = mamba_block(p, cfg, hh, state=st, conv=cv, chunk=1)
+            return out, (nst, ncv)
+
+        h, (ns, nc) = jax.lax.scan(body, h, (params["layers"], (cache["ssm"], cache["conv"])))
+        new_cache = {"ssm": ns, "conv": nc}
+    elif fam == "hybrid":
+        shared = params["shared_attn"]
+        # ring cache == window at 500k: the ring itself enforces the sliding
+        # window, so the attention dims carry sliding=0 (see attn_decode).
+        d = attn_dims(cfg, sliding=0)
+
+        def macro(hh, xs):
+            p, (st, cv, kv) = xs
+
+            def inner(h2, xs2):
+                pm, (s2, c2) = xs2
+                out, (ns2, nc2) = mamba_block(pm, cfg, h2, state=s2, conv=c2, chunk=1)
+                return out, (ns2, nc2)
+
+            hh, (nst, ncv) = jax.lax.scan(inner, hh, (p, (st, cv)))
+            a, nkv = attn.attn_decode(
+                shared["attn"], d, rmsnorm(hh, shared["ln"], cfg.norm_eps), kv, position,
+            )
+            hh = hh + a
+            hh = hh + mlp_ffn(shared["mlp"], rmsnorm(hh, shared["ln2"], cfg.norm_eps))
+            return hh, (nst, ncv, nkv)
+
+        h, (ns, nc, nkv) = jax.lax.scan(
+            macro, h, (params["layers"], (cache["ssm"], cache["conv"], cache["kv"]))
+        )
+        new_cache = dict(cache, ssm=ns, conv=nc, kv=nkv)
+        if "tail" in params:
+
+            def tail_body(hh, xs):
+                p, (st, cv) = xs
+                out, (nst, ncv) = mamba_block(p, cfg, hh, state=st, conv=cv, chunk=1)
+                return out, (nst, ncv)
+
+            h, (ts, tc) = jax.lax.scan(
+                tail_body, h, (params["tail"], (cache["tail_ssm"], cache["tail_conv"]))
+            )
+            new_cache["tail_ssm"], new_cache["tail_conv"] = ts, tc
+    elif fam == "audio":
+        xdims = attn_dims(cfg, causal=False)
+
+        def body(hh, xs):
+            p, c, ekv = xs
+            a, nc = attn.attn_decode(
+                p["attn"], attn_dims(cfg), rmsnorm(hh, p["ln1"], cfg.norm_eps), c, position
+            )
+            hh = hh + a
+            hh = hh + attn.attn_cross(
+                p["xattn"], xdims, rmsnorm(hh, p["lnx"], cfg.norm_eps), ekv, q_chunk=1
+            )
+            hh = hh + mlp_ffn(p["mlp"], rmsnorm(hh, p["ln2"], cfg.norm_eps))
+            return hh, nc
+
+        h, nself = jax.lax.scan(body, h, (params["layers"], cache["self"], enc_kv))
+        new_cache = {"self": nself}
+    else:
+        raise ValueError(fam)
+
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    return unembed_logits(h, table), new_cache
+
+
+def prefill(
+    cfg: ArchConfig, params, tokens, *, prefix_embeds=None,
+    q_chunk: int = 512, ssm_chunk: int = 256,
+):
+    """Prefill over a prompt: returns (last-position logits, cache).
+
+    ``prefix_embeds`` [B, P, D]: stub modality frontend output (vlm) prepended
+    before the token embeddings; the KV cache then covers P + S positions.
+    """
+    B, S = tokens.shape
+    h = embed(shard(tokens, BATCH, None), params["embed"])
+    if prefix_embeds is not None:
+        h = jnp.concatenate([prefix_embeds.astype(h.dtype), h], axis=1)
+    h = shard(h, BATCH, None, None)
+    fam = cfg.family
+
+    if fam in ("dense", "vlm"):
+
+        def body(hh, p):
+            a, kv = attn.attn_prefill(
+                p["attn"], attn_dims(cfg), rmsnorm(hh, p["ln1"], cfg.norm_eps), q_chunk=q_chunk
+            )
+            hh = hh + a
+            hh = hh + mlp_ffn(p["mlp"], rmsnorm(hh, p["ln2"], cfg.norm_eps))
+            return hh, kv
+
+        h, caches = jax.lax.scan(body, h, params["layers"])
+        cache = caches
+    elif fam == "moe":
+        if cfg.moe_every == 1:
+
+            def body(hh, p):
+                a, kv = attn.attn_prefill(
+                    p["attn"], attn_dims(cfg), rmsnorm(hh, p["ln1"], cfg.norm_eps), q_chunk=q_chunk
+                )
+                hh = hh + a
+                hh = hh + moe_lib.moe_ffn(
+                    p["moe"], moe_dims(cfg), rmsnorm(hh, p["ln2"], cfg.norm_eps)
+                )
+                return hh, kv
+
+            h, cache = jax.lax.scan(body, h, params["layers"])
+        else:
+
+            def macro(hh, p):
+                def inner(h2, pd):
+                    a, kv = attn.attn_prefill(
+                        pd["attn"], attn_dims(cfg), rmsnorm(h2, pd["ln1"], cfg.norm_eps),
+                        q_chunk=q_chunk,
+                    )
+                    h2 = h2 + a
+                    h2 = h2 + mlp_ffn(pd["mlp"], rmsnorm(h2, pd["ln2"], cfg.norm_eps))
+                    return h2, kv
+
+                hh, kvd = jax.lax.scan(inner, hh, p["dense"])
+                a, kvm = attn.attn_prefill(
+                    p["moe"]["attn"], attn_dims(cfg), rmsnorm(hh, p["moe"]["ln1"], cfg.norm_eps),
+                    q_chunk=q_chunk,
+                )
+                hh = hh + a
+                hh = hh + moe_lib.moe_ffn(
+                    p["moe"]["moe"], moe_dims(cfg), rmsnorm(hh, p["moe"]["ln2"], cfg.norm_eps)
+                )
+                return hh, {"dense": kvd, "moe": kvm}
+
+            h, cache = jax.lax.scan(macro, h, params["layers"])
+    elif fam == "ssm":
+
+        def body(hh, p):
+            out, (st, cv) = mamba_block(p, cfg, hh, chunk=ssm_chunk)
+            return out, (st, cv)
+
+        h, (st, cv) = jax.lax.scan(body, h, params["layers"])
+        cache = {"ssm": st, "conv": cv}
+    elif fam == "hybrid":
+        shared = params["shared_attn"]
+
+        def macro(hh, p):
+            def inner(h2, pm):
+                out, (s2, c2) = mamba_block(pm, cfg, h2, chunk=ssm_chunk)
+                return out, (s2, c2)
+
+            hh, (st, cv) = jax.lax.scan(inner, hh, p)
+            a, kv = attn.attn_prefill(
+                shared["attn"], attn_dims(cfg), rmsnorm(hh, shared["ln"], cfg.norm_eps),
+                q_chunk=q_chunk,
+            )
+            hh = hh + a
+            hh = hh + mlp_ffn(shared["mlp"], rmsnorm(hh, shared["ln2"], cfg.norm_eps))
+            return hh, (st, cv, kv)
+
+        h, (st, cv, kv) = jax.lax.scan(macro, h, params["layers"])
+        cache = {"ssm": st, "conv": cv, "kv": kv}
+        if "tail" in params:
+
+            def tail_body(hh, p):
+                out, (s2, c2) = mamba_block(p, cfg, hh, chunk=ssm_chunk)
+                return out, (s2, c2)
+
+            h, (ts, tc) = jax.lax.scan(tail_body, h, params["tail"])
+            cache["tail_ssm"], cache["tail_conv"] = ts, tc
+    elif fam == "audio":
+        raise ValueError("audio prefill goes through prefill_encdec")
+    else:
+        raise ValueError(fam)
+
+    h = rmsnorm(h[:, -1:], params["final_norm"], cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    return unembed_logits(h, table), cache
+
+
+def prefill_encdec(cfg: ArchConfig, params, enc_embeds, dec_tokens, *, q_chunk=512):
+    """Encoder pass + decoder prefill; returns (logits, self-cache, cross-KV)."""
+    xdims = attn_dims(cfg, causal=False)
+    enc_h = enc_embeds.astype(params["embed"].dtype)
+    enc_h = shard(enc_h, BATCH, None, None)
+
+    def enc_body(hh, p):
+        hh = hh + attn.attn_train(
+            p["attn"], attn_dims(cfg, causal=False), rmsnorm(hh, p["ln1"], cfg.norm_eps),
+            q_chunk=q_chunk,
+        )
+        return hh + mlp_ffn(p["mlp"], rmsnorm(hh, p["ln2"], cfg.norm_eps)), None
+
+    enc_h, _ = jax.lax.scan(enc_body, enc_h, params["enc_layers"])
+    enc_h = rmsnorm(enc_h, params["enc_norm"], cfg.norm_eps)
+
+    h = embed(dec_tokens, params["embed"])
+
+    def dec_body(hh, p):
+        a, kv = attn.attn_prefill(
+            p["attn"], attn_dims(cfg), rmsnorm(hh, p["ln1"], cfg.norm_eps), q_chunk=q_chunk
+        )
+        hh = hh + a
+        ekv = attn.cross_kv(p["xattn"], xdims, enc_h)
+        hh = hh + attn.attn_cross(
+            p["xattn"], xdims, rmsnorm(hh, p["lnx"], cfg.norm_eps), ekv, q_chunk=q_chunk
+        )
+        hh = hh + mlp_ffn(p["mlp"], rmsnorm(hh, p["ln2"], cfg.norm_eps))
+        return hh, (kv, ekv)
+
+    h, (self_kv, enc_kv) = jax.lax.scan(dec_body, h, params["layers"])
+    h = rmsnorm(h[:, -1:], params["final_norm"], cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    return unembed_logits(h, table), {"self": self_kv}, enc_kv

@@ -1,0 +1,39 @@
+"""Dense FFN (SwiGLU) — the megatron-TP workhorse."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, shard
+
+
+def init_mlp(key, d_model: int, d_ff: int, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], (d_model, d_ff), dtype),
+        "w_up": dense_init(ks[1], (d_model, d_ff), dtype),
+        "w_down": dense_init(ks[2], (d_ff, d_model), dtype, fan_in=d_ff),
+    }
+
+
+def mlp_ffn(params, x: jax.Array) -> jax.Array:
+    if x.ndim == 3 and x.shape[1] == 1:
+        # decode (S==1): 2D weight-stationary plan — keep the residual stream
+        # D-sharded over `data` so both matmuls contract sharded dims in
+        # place.  Weights never move; the collectives are MB-scale activation
+        # psums instead of per-token FSDP weight gathers (EXPERIMENTS.md
+        # §Perf iteration B: 611ms -> ~60ms collective term on mistral-123b).
+        x = shard(x, None, None, ("data",))
+        h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+        h = shard(h, None, None, "model")
+        y = h @ params["w_down"]
+        return shard(y, None, None, ("data",))
+    h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+    # TP: d_ff over model — and batch over (pod, data): leaving batch
+    # unconstrained here let GSPMD pick a full-batch-gather plan for the
+    # remat'd backward (412 GB/step/device; EXPERIMENTS.md §Perf iter 1).
+    if h.ndim == 3:
+        h = shard(h, ("pod", "data"), None, "model")
+    else:
+        h = shard(h, *((None,) * (h.ndim - 1)), "model")
+    return h @ params["w_down"]

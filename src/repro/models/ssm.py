@@ -1,0 +1,216 @@
+"""Selective state-space blocks: Mamba1 (falcon-mamba) and Mamba2 (zamba2).
+
+TPU adaptation (DESIGN.md §3): the CUDA selective-scan kernel becomes a
+*chunked associative scan* — sequential ``lax.scan`` over chunks carrying the
+[B, ..., N] state, parallel ``lax.associative_scan`` inside each chunk.  The
+working set is one chunk's [B, cl, d_inner, N] element tensor (VMEM-scale)
+instead of the full sequence, and the recurrence h_t = a_t*h_{t-1} + b_t is
+exactly the first-order linear-recurrence monoid:
+    (a1, b1) . (a2, b2) = (a1*a2, a2*b1 + b2).
+Decode is the O(1) single-step update on the carried state.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, shard
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMDims:
+    d_model: int
+    d_state: int
+    d_conv: int = 4
+    expand: int = 2
+    version: int = 1  # 1 = mamba1, 2 = mamba2
+    n_heads: int = 0  # mamba2: value heads; 0 -> d_inner // 64
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def dt_rank(self) -> int:
+        return max(1, self.d_model // 16)
+
+    @property
+    def heads(self) -> int:
+        return self.n_heads or max(1, self.d_inner // 64)
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_inner // self.heads
+
+
+# --------------------------------------------------------------------------
+# linear-recurrence scan
+# --------------------------------------------------------------------------
+
+
+def _lr_combine(e1, e2):
+    a1, b1 = e1
+    a2, b2 = e2
+    return a1 * a2, a2 * b1 + b2
+
+
+def chunked_linear_scan(a, b, h0, chunk: int):
+    """h_t = a_t * h_{t-1} + b_t along axis=1 (time).
+
+    a, b: [B, L, ...]; h0: [B, ...].  Returns (h_all [B, L, ...], h_last).
+    """
+    B, L = a.shape[0], a.shape[1]
+    cl = min(chunk, L)
+    n = L // cl
+    assert L % cl == 0, (L, cl)
+    a_c = a.reshape(B, n, cl, *a.shape[2:]).swapaxes(0, 1)
+    b_c = b.reshape(B, n, cl, *b.shape[2:]).swapaxes(0, 1)
+
+    def body(h, xs):
+        ac, bc = xs  # [B, cl, ...]
+        # prefix-combine within the chunk (log-depth, vectorized)
+        pa, pb = jax.lax.associative_scan(_lr_combine, (ac, bc), axis=1)
+        # fold in the carried state: h_t = pa_t * h0 + pb_t
+        hs = pa * h[:, None] + pb
+        return hs[:, -1], hs
+
+    h_last, h_all = jax.lax.scan(body, h0, (a_c, b_c))
+    out_tail = jnp.broadcast_shapes(a.shape, b.shape)[2:]
+    h_all = h_all.swapaxes(0, 1).reshape(B, L, *out_tail)
+    return h_all, h_last
+
+
+def causal_conv1d(x, w, prev=None):
+    """Depthwise causal conv along time.  x: [B, L, C]; w: [K, C].
+
+    ``prev``: [B, K-1, C] left context (decode / chunk continuation).
+    Returns (y [B, L, C], new_prev [B, K-1, C]).
+    """
+    K = w.shape[0]
+    B, L, C = x.shape
+    if prev is None:
+        prev = jnp.zeros((B, K - 1, C), x.dtype)
+    xp = jnp.concatenate([prev, x], axis=1)  # [B, L+K-1, C]
+    y = sum(xp[:, i : i + L, :] * w[i][None, None, :] for i in range(K))
+    return y, xp[:, -(K - 1) :, :] if K > 1 else jnp.zeros((B, 0, C), x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Mamba1 (falcon-mamba)
+# --------------------------------------------------------------------------
+
+
+def init_mamba(key, dims: SSMDims, dtype) -> dict:
+    ks = jax.random.split(key, 8)
+    D, Di, N, R = dims.d_model, dims.d_inner, dims.d_state, dims.dt_rank
+    p = {
+        "in_proj": dense_init(ks[0], (D, 2 * Di), dtype),
+        "conv_w": dense_init(ks[1], (dims.d_conv, Di), dtype, fan_in=dims.d_conv),
+        "out_proj": dense_init(ks[2], (Di, D), dtype, fan_in=Di),
+        "D": jnp.ones((Di,), jnp.float32),
+    }
+    if dims.version == 1:
+        p |= {
+            "x_proj": dense_init(ks[3], (Di, R + 2 * N), dtype),
+            "dt_proj": dense_init(ks[4], (R, Di), jnp.float32, fan_in=R),
+            "dt_bias": jnp.zeros((Di,), jnp.float32),
+            # S4D-real init: A = -(1..N) per channel
+            "A_log": jnp.log(jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32), (Di, 1))),
+        }
+    else:  # mamba2: per-head scalar decay + direct B,C,dt projections
+        H = dims.heads
+        p |= {
+            "bc_proj": dense_init(ks[3], (D, 2 * N), dtype),
+            "dt_proj": dense_init(ks[4], (D, H), jnp.float32),
+            "dt_bias": jnp.zeros((H,), jnp.float32),
+            "A_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(jnp.float32)),
+            "gate_norm": jnp.zeros((Di,), dtype),
+            "D": jnp.ones((H,), jnp.float32),
+        }
+    return p
+
+
+def _mamba1_abx(params, dims: SSMDims, xc):
+    """Per-step SSM coefficients from the conv output.  xc: [B, L, Di]."""
+    N, R = dims.d_state, dims.dt_rank
+    proj = xc @ params["x_proj"]  # [B, L, R+2N]
+    dt_r, Bc, Cc = jnp.split(proj, [R, R + N], axis=-1)
+    dt = jax.nn.softplus(
+        dt_r.astype(jnp.float32) @ params["dt_proj"] + params["dt_bias"]
+    )  # [B, L, Di]
+    A = -jnp.exp(params["A_log"])  # [Di, N]
+    a = jnp.exp(dt[..., None] * A[None, None])  # [B, L, Di, N]
+    bx = (dt * xc.astype(jnp.float32))[..., None] * Bc.astype(jnp.float32)[..., None, :]
+    return a, bx, Cc
+
+
+def mamba_forward(params, dims: SSMDims, x, state=None, conv_prev=None, chunk: int = 256):
+    """Full-sequence forward.  x: [B, L, D].
+
+    Returns (y [B, L, D], (ssm_state, conv_tail)) so prefill can hand the
+    recurrent state to decode.
+    """
+    B, L, D = x.shape
+    Di, N = dims.d_inner, dims.d_state
+    decode = L == 1
+    if decode:
+        # decode-2D plan (EXPERIMENTS.md §Perf B3): contract D over `data`
+        # in place instead of gathering FSDP shards of in/out_proj per token
+        x = shard(x, None, None, ("data",))
+    xi, z = jnp.split(x @ params["in_proj"], 2, axis=-1)  # [B, L, Di] each
+    xi = shard(xi, ("pod", "data"), None, "model")
+    xc, conv_tail = causal_conv1d(xi, params["conv_w"], conv_prev)
+    xc = jax.nn.silu(xc)
+
+    if dims.version == 1:
+        a, bx, Cc = _mamba1_abx(params, dims, xc)
+        h0 = state if state is not None else jnp.zeros((B, Di, N), jnp.float32)
+        hs, h_last = chunked_linear_scan(a, bx, h0, chunk)
+        y = jnp.einsum("blin,bln->bli", hs, Cc.astype(jnp.float32))
+        y = y + params["D"][None, None] * xc.astype(jnp.float32)
+        y = y.astype(x.dtype) * jax.nn.silu(z)
+    else:
+        H, P = dims.heads, dims.head_dim
+        bc = x @ params["bc_proj"]
+        Bc, Cc = jnp.split(bc.astype(jnp.float32), 2, axis=-1)  # [B, L, N]
+        dt = jax.nn.softplus(
+            x.astype(jnp.float32) @ params["dt_proj"] + params["dt_bias"]
+        )  # [B, L, H]
+        A = -jnp.exp(params["A_log"])  # [H]
+        a = jnp.exp(dt * A[None, None])[..., None, None]  # [B, L, H, 1, 1]
+        xh = xc.reshape(B, L, H, P).astype(jnp.float32)
+        bx = (dt[..., None] * xh)[..., None] * Bc[:, :, None, None, :]  # [B,L,H,P,N]
+        h0 = state if state is not None else jnp.zeros((B, H, P, N), jnp.float32)
+        hs, h_last = chunked_linear_scan(a, bx, h0, chunk)
+        y = jnp.einsum("blhpn,bln->blhp", hs, Cc)
+        y = y + params["D"][None, None, :, None] * xh
+        y = y.reshape(B, L, Di)
+        from repro.models.common import rmsnorm
+
+        y = rmsnorm(y.astype(x.dtype) * jax.nn.silu(z), params["gate_norm"], 1e-5)
+
+    yv = y.astype(x.dtype)
+    if decode:
+        yv = shard(yv, None, None, "model")
+        out = yv @ params["out_proj"]
+        out = shard(out, None, None, ("data",))
+    else:
+        out = yv @ params["out_proj"]
+    return out, (h_last, conv_tail)
+
+
+def mamba_decode(params, dims: SSMDims, x, state, conv_prev):
+    """Single-token step.  x: [B, 1, D]; O(1) state update."""
+    y, (h, tail) = mamba_forward(params, dims, x, state=state, conv_prev=conv_prev, chunk=1)
+    return y, (h, tail)
+
+
+def init_ssm_state(dims: SSMDims, B: int, dtype=jnp.bfloat16):
+    if dims.version == 1:
+        h = jnp.zeros((B, dims.d_inner, dims.d_state), jnp.float32)
+    else:
+        h = jnp.zeros((B, dims.heads, dims.head_dim, dims.d_state), jnp.float32)
+    conv = jnp.zeros((B, dims.d_conv - 1, dims.d_inner), dtype)
+    return h, conv

@@ -1,0 +1,26 @@
+"""Decentralized Holon runtime (paper §4) + the centralized Flink-like
+baseline it is evaluated against, both driven by a discrete-event simulator.
+
+The *state transitions* are the real JAX dataplane (WCRDT folds / lattice
+joins / window reads); only *time* is modeled (network delay, heartbeats,
+checkpoint RTT), with the cost constants documented in ``SimConfig`` and
+EXPERIMENTS.md.  This is the honest CPU-container stand-in for the paper's
+GCP/Kafka deployment: relative behaviour (recovery time, sensitivity,
+scalability) is reproduced; absolute wall-clock numbers are simulation time.
+"""
+from repro.runtime.config import SimConfig, FailureScenario
+from repro.runtime.consumer import Consumer
+from repro.runtime.storage import CheckpointStorage
+from repro.runtime.harness import HolonHarness, run_holon
+from repro.runtime.flink_baseline import FlinkHarness, run_flink
+
+__all__ = [
+    "SimConfig",
+    "FailureScenario",
+    "Consumer",
+    "CheckpointStorage",
+    "HolonHarness",
+    "run_holon",
+    "FlinkHarness",
+    "run_flink",
+]

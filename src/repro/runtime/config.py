@@ -1,0 +1,101 @@
+"""Simulation cost model + failure scenarios.
+
+Constants mirror the paper's experimental setup (§5.1/§5.2) where stated, and
+conservative GCP-like values elsewhere.  All times in milliseconds of
+simulated time.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    # --- workload ---
+    num_nodes: int = 5
+    num_partitions: int = 10
+    window_len: int = 1000  # ms, tumbling (Nexmark Q7 uses seconds-scale)
+    num_slots: int = 64  # WCRDT ring size
+    events_per_batch: int = 1024
+    rate_per_partition: float = 10_000.0  # events/s
+    num_batches: int = 400  # ~41 s of event time per partition
+    seed: int = 0
+
+    # --- node execution ---
+    batch_proc_ms: float = 2.0  # fold+emit compute per batch (2vCPU node)
+    poll_idle_ms: float = 2.0  # executor re-poll when no batch available
+
+    # --- Holon decentralized coordination (paper §4) ---
+    sync_interval_ms: float = 100.0  # background CRDT broadcast period
+    broadcast_delay_ms: float = 5.0  # one-way broadcast-stream latency
+    hb_interval_ms: float = 250.0  # decentralized liveness beacon
+    hb_timeout_ms: float = 1000.0  # peer declared failed after this silence
+    ckpt_interval_ms: float = 1000.0  # "sometimes do storage.put" period
+    storage_rtt_ms: float = 50.0  # remote checkpoint read/write RTT
+    steal_delay_ms: float = 20.0  # control-plane work-steal handshake
+
+    # --- Flink-like centralized baseline (paper §5.1 config) ---
+    flink_hb_interval_ms: float = 4000.0  # paper: 4 s
+    flink_hb_timeout_ms: float = 6000.0  # paper: 6 s
+    flink_ckpt_interval_ms: float = 5000.0  # paper: 5 s checkpoints
+    flink_restart_ms: float = 8000.0  # job restart + state redistribute
+    flink_restore_ms: float = 4000.0  # RocksDB restore from remote
+    flink_barrier_pause_ms: float = 30.0  # per-checkpoint alignment stall
+    flink_tree_fanin: int = 2  # static aggregation tree fan-in
+    shuffle_hop_ms: float = 5.0  # per network hop in the agg tree
+    flink_spare_slots: bool = False  # spare TaskManager slots for failover
+
+    @property
+    def batch_span_ms(self) -> float:
+        return 1000.0 * self.events_per_batch / self.rate_per_partition
+
+    @property
+    def horizon_ms(self) -> float:
+        return self.num_batches * self.batch_span_ms
+
+
+@dataclasses.dataclass(frozen=True)
+class FailureScenario:
+    """When nodes fail and (optionally) restart, in simulated ms.
+
+    The paper's three scenarios (§5.2):
+      concurrent: two nodes at t, restart t+10s
+      subsequent: two nodes at t, t+5s; each restarts 10s after its failure
+      crash:      two nodes at t, never restarted
+    """
+
+    name: str = "baseline"
+    fail_times_ms: tuple[float, ...] = ()
+    fail_nodes: tuple[int, ...] = ()
+    restart_times_ms: tuple[float, ...] = ()  # -1 = never
+
+    @classmethod
+    def baseline(cls):
+        return cls()
+
+    @classmethod
+    def concurrent(cls, t: float = 8000.0):
+        return cls(
+            name="concurrent",
+            fail_times_ms=(t, t),
+            fail_nodes=(0, 1),
+            restart_times_ms=(t + 10_000, t + 10_000),
+        )
+
+    @classmethod
+    def subsequent(cls, t: float = 8000.0):
+        return cls(
+            name="subsequent",
+            fail_times_ms=(t, t + 5_000),
+            fail_nodes=(0, 1),
+            restart_times_ms=(t + 10_000, t + 15_000),
+        )
+
+    @classmethod
+    def crash(cls, t: float = 8000.0):
+        return cls(
+            name="crash",
+            fail_times_ms=(t, t),
+            fail_nodes=(0, 1),
+            restart_times_ms=(-1.0, -1.0),
+        )

@@ -1,0 +1,177 @@
+"""Centralized stream-processing baseline ("Flink-like", paper §5.1).
+
+Models the architecture the paper compares against:
+
+* global aggregation via a **static aggregation tree** (fan-in
+  ``flink_tree_fanin``): partitions pre-aggregate locally, forward partials
+  up the tree when their local watermark passes the window; the root emits
+  once ALL leaves contributed — end-to-end latency is the *slowest path*.
+  Each hop pays network latency + the output-buffer flush timeout (Flink's
+  default 100 ms execution.buffer-timeout is the dominant term).
+* **aligned checkpoints with centralized 2PC** every ``flink_ckpt_interval``:
+  a barrier pause for every node.
+* **centralized recovery**: heartbeat detection (paper config: 4 s interval /
+  6 s timeout) then full-job stop → restore from last completed global
+  checkpoint → replay.  Without spare slots a crash leaves the job down
+  (Fig. 6 bottom-right); with spare slots failover still pays
+  detect + restart + restore.
+
+What differs from Holon is purely the coordination structure — which is the
+paper's point: same logs, same windows, same per-batch compute cost.
+"""
+from __future__ import annotations
+
+import math
+
+from repro.runtime.config import FailureScenario, SimConfig
+from repro.runtime.consumer import Consumer
+from repro.runtime.sim import Sim
+from repro.streaming.events import EventBatch
+from repro.streaming.generator import NexmarkConfig, generate_log
+from repro.streaming.queries import Query
+
+# Flink's default execution.buffer-timeout — dominates small-record latency.
+BUFFER_TIMEOUT_MS = 100.0
+
+
+class FlinkHarness:
+    def __init__(self, cfg: SimConfig, query: Query, log: EventBatch | None = None):
+        self.cfg = cfg
+        self.query = query
+        nx = NexmarkConfig(
+            num_partitions=cfg.num_partitions,
+            num_batches=cfg.num_batches,
+            events_per_batch=cfg.events_per_batch,
+            rate_per_partition=cfg.rate_per_partition,
+            seed=cfg.seed,
+        )
+        self.log = log if log is not None else generate_log(nx)
+        self.sim = Sim()
+        self.consumer = Consumer(window_len=cfg.window_len)
+        self.tree_depth = max(
+            1, math.ceil(math.log(max(cfg.num_partitions, 2), cfg.flink_tree_fanin))
+        )
+
+        P = cfg.num_partitions
+        self.idx = [0] * P  # next batch per partition
+        self.forwarded: set[tuple[int, int]] = set()  # (wid, pid) sent up-tree
+        self.arrived: dict[int, set[int]] = {}  # wid -> pids at root
+        self.emitted: set[int] = set()
+        self.down = False  # global stop flag
+        self.job_dead = False
+        self.paused_until = 0.0  # checkpoint barrier pause
+        self.last_ckpt_idx = [0] * P
+        self.node_of = [p % cfg.num_nodes for p in range(P)]
+        self.node_alive = [True] * cfg.num_nodes
+
+    # ---- per-partition processing loop -------------------------------------
+    def _loop_part(self, pid: int):
+        cfg = self.cfg
+        if self.job_dead or self.down or not self.node_alive[self.node_of[pid]]:
+            return
+        if self.idx[pid] >= cfg.num_batches:
+            return
+        if self.sim.now < self.paused_until:  # aligned-barrier stall
+            self.sim.at(self.paused_until, lambda: self._loop_part(pid))
+            return
+        avail = (self.idx[pid] + 1) * cfg.batch_span_ms
+        if self.sim.now < avail:
+            self.sim.at(avail, lambda: self._loop_part(pid))
+            return
+        b = self.idx[pid]
+        self.idx[pid] += 1
+        self.consumer.count_events(self.sim.now, cfg.events_per_batch)
+        # local watermark after this batch = end of batch span
+        wm = (b + 1) * cfg.batch_span_ms
+        closed = int(wm // cfg.window_len)
+        for wid in range(closed):
+            if (wid, pid) not in self.forwarded:
+                self.forwarded.add((wid, pid))
+                delay = self.tree_depth * (cfg.shuffle_hop_ms + BUFFER_TIMEOUT_MS)
+                self.sim.after(delay, lambda w=wid, p=pid: self._arrive(w, p))
+        self.sim.after(cfg.batch_proc_ms, lambda: self._loop_part(pid))
+
+    def _arrive(self, wid: int, pid: int):
+        if self.job_dead or self.down:
+            return
+        s = self.arrived.setdefault(wid, set())
+        s.add(pid)
+        if len(s) >= self.cfg.num_partitions and wid not in self.emitted:
+            self.emitted.add(wid)
+            self.consumer.emit(self.sim.now, 0, wid, None)
+
+    # ---- checkpoint barrier -------------------------------------------------
+    def _loop_ckpt(self):
+        if self.job_dead:
+            return
+        cfg = self.cfg
+        if not self.down:
+            self.last_ckpt_idx = list(self.idx)
+            self.paused_until = self.sim.now + cfg.flink_barrier_pause_ms
+        self.sim.after(cfg.flink_ckpt_interval_ms, self._loop_ckpt)
+
+    # ---- failure handling -----------------------------------------------------
+    def fail_node(self, nid: int):
+        self.node_alive[nid] = False
+        self.sim.after(self.cfg.flink_hb_timeout_ms, lambda: self._detect())
+
+    def restart_node(self, nid: int):
+        self.node_alive[nid] = True
+        if self.down and not self.job_dead:
+            self._recover()
+
+    def _detect(self):
+        if self.job_dead or self.down:
+            return
+        self.down = True
+        if all(self.node_alive) or self.cfg.flink_spare_slots:
+            self._recover()
+        # else: job stays down until a node restarts (or forever — Fig. 6)
+
+    def _recover(self):
+        cfg = self.cfg
+
+        def up():
+            if self.job_dead or not self.down:
+                return
+            if not (all(self.node_alive) or cfg.flink_spare_slots):
+                return
+            self.down = False
+            # spare slots: reassign dead nodes' partitions to live nodes
+            live = [n for n in range(cfg.num_nodes) if self.node_alive[n]]
+            for pid in range(cfg.num_partitions):
+                if not self.node_alive[self.node_of[pid]]:
+                    self.node_of[pid] = live[pid % len(live)]
+            self.idx = list(self.last_ckpt_idx)
+            # partials not yet emitted are lost with operator state -> replayed
+            self.forwarded = {(w, p) for (w, p) in self.forwarded if w in self.emitted}
+            self.arrived = {w: s for w, s in self.arrived.items() if w in self.emitted}
+            for pid in range(cfg.num_partitions):
+                self.sim.after(0.0, lambda p=pid: self._loop_part(p))
+
+        self.sim.after(cfg.flink_restart_ms + cfg.flink_restore_ms, up)
+
+    # ---- driver ---------------------------------------------------------------
+    def run(self, scenario: FailureScenario | None = None, horizon_ms: float | None = None):
+        scenario = scenario or FailureScenario.baseline()
+        cfg = self.cfg
+        for pid in range(cfg.num_partitions):
+            self.sim.after(0.0, lambda p=pid: self._loop_part(p))
+        self.sim.after(cfg.flink_ckpt_interval_ms, self._loop_ckpt)
+        for t, nid, rt in zip(
+            scenario.fail_times_ms, scenario.fail_nodes, scenario.restart_times_ms
+        ):
+            self.sim.at(t, lambda n=nid: self.fail_node(n))
+            if rt >= 0:
+                self.sim.at(rt, lambda n=nid: self.restart_node(n))
+        horizon = horizon_ms if horizon_ms is not None else cfg.horizon_ms + 5000.0
+        self.sim.run(until=horizon)
+        return self.consumer
+
+
+def run_flink(
+    cfg: SimConfig, query: Query, scenario: FailureScenario | None = None,
+    horizon_ms: float | None = None, log: EventBatch | None = None,
+) -> Consumer:
+    h = FlinkHarness(cfg, query, log=log)
+    return h.run(scenario, horizon_ms)

@@ -1,0 +1,306 @@
+"""Holon Streaming runtime — Algorithm 2 with decentralized coordination,
+driven by the discrete-event simulator.
+
+Every node runs four independent loops (no global coordination anywhere):
+
+  executor   : round-robin over owned partitions; read next available input
+               batch; fold it into the node replica (real JAX dataplane);
+               emit every newly-completed window (gated by the global
+               watermark, so emissions are deterministic and idempotent).
+  sync       : every ``sync_interval`` publish the node replica on the
+               broadcast stream; peers lattice-join it on delivery.
+  checkpoint : every ``ckpt_interval`` put each owned partition's
+               (nxt_idx, nxt_odx, emitted_upto, replica, local) to storage —
+               unsynchronized, local decision ("sometimes do").
+  control    : heartbeat peers; on silence > ``hb_timeout`` recompute the
+               deterministic assignment over live nodes and *steal* orphaned
+               partitions by fetching their checkpoints (Recover).
+
+Failure injection flips ``alive``; restart wipes volatile state and rejoins —
+recovery is work stealing like any other reconfiguration (paper §4.3).
+Exactly-once: deterministic replay from checkpoints + consumer dedup by
+(partition, window); property-tested against a failure-free oracle.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import wcrdt as W
+from repro.runtime.config import FailureScenario, SimConfig
+from repro.runtime.consumer import Consumer
+from repro.runtime.sim import Sim
+from repro.runtime.storage import CheckpointStorage, PartitionCheckpoint
+from repro.streaming.events import EventBatch
+from repro.streaming.generator import NexmarkConfig, generate_log
+from repro.streaming.queries import Query
+
+
+def assignment(pid: int, live_nodes: list[int]) -> int:
+    """Deterministic partition→node rule over the live set (rendezvous)."""
+    if not live_nodes:
+        return -1
+    return live_nodes[pid % len(live_nodes)]
+
+
+@dataclasses.dataclass
+class PartitionMeta:
+    idx: int = 0  # next input-log batch index
+    odx: int = 0  # next output index
+    emitted_upto: int = 0  # first window id not yet emitted
+
+
+class HolonNode:
+    def __init__(self, nid: int, harness: "HolonHarness"):
+        self.nid = nid
+        self.h = harness
+        self.alive = True
+        self.owned: list[int] = []
+        self.meta: dict[int, PartitionMeta] = {}
+        self.locals: dict[int, Any] = {}
+        self.replica = harness.query.init_shared()
+        self.last_hb: dict[int, float] = {}
+        self._rr = 0  # round-robin cursor over owned partitions
+        self.generation = 0  # bumped on restart; stale callbacks check it
+
+    # ---- lifecycle ---------------------------------------------------------
+    def boot(self, initial_pids: list[int]):
+        for pid in sorted(initial_pids):
+            self._adopt(pid, ckpt=None)
+        sim = self.h.sim
+        gen = self.generation
+        sim.after(0.0, lambda: self._loop_exec(gen))
+        sim.after(self.h.cfg.sync_interval_ms, lambda: self._loop_sync(gen))
+        sim.after(self.h.cfg.hb_interval_ms, lambda: self._loop_control(gen))
+        sim.after(self.h.cfg.ckpt_interval_ms, lambda: self._loop_ckpt(gen))
+        self._broadcast_hb()
+
+    def fail(self):
+        self.alive = False
+
+    def restart(self):
+        """Rejoin with empty volatile state; recover owned work from storage."""
+        self.generation += 1
+        self.alive = True
+        self.owned = []
+        self.meta = {}
+        self.locals = {}
+        self.replica = self.h.query.init_shared()
+        self.last_hb = {}
+        self._rr = 0
+        self.boot([])
+        # control loop will steal this node's assigned partitions
+
+    # ---- helpers -----------------------------------------------------------
+    def _adopt(self, pid: int, ckpt: PartitionCheckpoint | None):
+        if pid in self.meta:
+            return
+        q = self.h.query
+        if ckpt is None:
+            self.meta[pid] = PartitionMeta()
+            self.locals[pid] = q.init_local()
+        else:
+            self.meta[pid] = PartitionMeta(ckpt.nxt_idx, ckpt.nxt_odx, ckpt.emitted_upto)
+            self.locals[pid] = ckpt.local
+            if q.shared_specs:
+                self.replica = self.h.merge_fn(self.replica, ckpt.shared)
+        self.owned = sorted(set(self.owned) | {pid})
+
+    def _drop(self, pid: int):
+        if pid in self.meta:
+            self.owned.remove(pid)
+            del self.meta[pid]
+            del self.locals[pid]
+
+    def _live_view(self) -> list[int]:
+        now = self.h.sim.now
+        live = [self.nid]
+        for nid, t in self.last_hb.items():
+            if now - t <= self.h.cfg.hb_timeout_ms:
+                live.append(nid)
+        return sorted(set(live))
+
+    def _broadcast_hb(self):
+        if not self.alive:
+            return
+        t = self.h.sim.now
+        for other in self.h.nodes:
+            if other.nid != self.nid:
+                self.h.sim.after(
+                    self.h.cfg.broadcast_delay_ms,
+                    lambda o=other, s=self.nid, tt=t: o.last_hb.__setitem__(s, tt),
+                )
+
+    # ---- loops ---------------------------------------------------------------
+    def _loop_exec(self, gen: int):
+        if not self.alive or gen != self.generation:
+            return
+        cfg = self.h.cfg
+        delay = cfg.poll_idle_ms
+        if self.owned:
+            # round-robin over owned partitions ("sometimes do" in Alg. 2 —
+            # deterministic for reproducibility)
+            for _ in range(len(self.owned)):
+                pid = self.owned[self._rr % len(self.owned)]
+                self._rr += 1
+                if self._try_process(pid):
+                    delay = cfg.batch_proc_ms
+                    break
+        self.h.sim.after(delay, lambda: self._loop_exec(gen))
+
+    def _try_process(self, pid: int) -> bool:
+        cfg, q = self.h.cfg, self.h.query
+        m = self.meta[pid]
+        if m.idx >= cfg.num_batches:
+            self._emit_ready(pid)  # drain tail windows as gwm advances
+            return False
+        # batch b becomes available once the producer has written it
+        avail = (m.idx + 1) * cfg.batch_span_ms
+        if self.h.sim.now < avail:
+            self._emit_ready(pid)
+            return False
+        batch = self.h.batch(pid, m.idx)
+        self.replica, self.locals[pid] = self.h.fold_fn(
+            self.replica, self.locals[pid], batch, pid, m.idx
+        )
+        m.idx += 1
+        self.h.consumer.count_events(self.h.sim.now, cfg.events_per_batch)
+        self._emit_ready(pid)
+        return True
+
+    def _emit_ready(self, pid: int):
+        """Emit every window completed under the current global watermark."""
+        q = self.h.query
+        m = self.meta[pid]
+        gwm = int(q.global_watermark(self.replica, self.locals[pid]))
+        # window w is complete iff gwm >= (w+1)*window_len
+        while gwm >= (m.emitted_upto + 1) * q.window_len:
+            wid = m.emitted_upto
+            val, ok = self.h.read_fn(self.replica, self.locals[pid], wid)
+            if not bool(ok):
+                # complete but no longer ring-resident (emission lagged more
+                # than num_slots windows) — skip and count; sized-away in cfg
+                self.h.evicted_windows += 1
+                m.emitted_upto = wid + 1
+                continue
+            self.h.consumer.emit(self.h.sim.now, pid, wid, np.asarray(val))
+            m.odx += 1
+            m.emitted_upto = wid + 1
+
+    def _loop_sync(self, gen: int):
+        if not self.alive or gen != self.generation:
+            return
+        if self.h.query.shared_specs:
+            snap = self.replica
+            for other in self.h.nodes:
+                if other.nid != self.nid:
+                    self.h.sim.after(
+                        self.h.cfg.broadcast_delay_ms,
+                        lambda o=other, s=snap: o._on_sync(s),
+                    )
+        self.h.sim.after(self.h.cfg.sync_interval_ms, lambda: self._loop_sync(gen))
+
+    def _on_sync(self, snap):
+        if not self.alive:
+            return
+        self.replica = self.h.merge_fn(self.replica, snap)
+        # merged watermark may complete windows for our partitions
+        for pid in self.owned:
+            self._emit_ready(pid)
+
+    def _loop_control(self, gen: int):
+        if not self.alive or gen != self.generation:
+            return
+        self._broadcast_hb()
+        live = self._live_view()
+        # steal partitions assigned to me that I don't own; drop ones that left
+        for pid in range(self.h.cfg.num_partitions):
+            tgt = assignment(pid, live)
+            if tgt == self.nid and pid not in self.meta:
+                self.h.sim.after(
+                    self.h.cfg.steal_delay_ms + self.h.cfg.storage_rtt_ms,
+                    lambda p=pid, g=gen: self._finish_steal(p, g),
+                )
+            elif tgt != self.nid and pid in self.meta:
+                self._drop(pid)
+        self.h.sim.after(self.h.cfg.hb_interval_ms, lambda: self._loop_control(gen))
+
+    def _finish_steal(self, pid: int, gen: int):
+        if not self.alive or gen != self.generation or pid in self.meta:
+            return
+        # re-check assignment under the current view (node may have returned)
+        if assignment(pid, self._live_view()) != self.nid:
+            return
+        self._adopt(pid, self.h.storage.get(pid))
+
+    def _loop_ckpt(self, gen: int):
+        if not self.alive or gen != self.generation:
+            return
+        for pid in list(self.owned):
+            m = self.meta[pid]
+            ck = PartitionCheckpoint(
+                nxt_idx=m.idx,
+                nxt_odx=m.odx,
+                emitted_upto=m.emitted_upto,
+                shared=self.replica,
+                local=self.locals[pid],
+            )
+            # async durable write completes after one storage RTT
+            self.h.sim.after(
+                self.h.cfg.storage_rtt_ms, lambda p=pid, c=ck: self.h.storage.put(p, c)
+            )
+        self.h.sim.after(self.h.cfg.ckpt_interval_ms, lambda: self._loop_ckpt(gen))
+
+
+class HolonHarness:
+    def __init__(self, cfg: SimConfig, query: Query, log: EventBatch | None = None):
+        self.cfg = cfg
+        self.query = query
+        nx = NexmarkConfig(
+            num_partitions=cfg.num_partitions,
+            num_batches=cfg.num_batches,
+            events_per_batch=cfg.events_per_batch,
+            rate_per_partition=cfg.rate_per_partition,
+            seed=cfg.seed,
+        )
+        self.log = log if log is not None else generate_log(nx)
+        self._log_np = jax.tree.map(np.asarray, self.log)
+        self.sim = Sim()
+        self.storage = CheckpointStorage()
+        self.consumer = Consumer(window_len=cfg.window_len)
+        self.evicted_windows = 0
+        # jitted dataplane
+        self.fold_fn = jax.jit(query.fold)
+        self.merge_fn = jax.jit(query.merge_shared)
+        self.read_fn = jax.jit(query.read)
+        self.nodes = [HolonNode(n, self) for n in range(cfg.num_nodes)]
+
+    def batch(self, pid: int, idx: int) -> EventBatch:
+        return jax.tree.map(lambda x: x[pid, idx], self.log)
+
+    def run(self, scenario: FailureScenario | None = None, horizon_ms: float | None = None):
+        scenario = scenario or FailureScenario.baseline()
+        for n in self.nodes:
+            pids = [p for p in range(self.cfg.num_partitions) if p % self.cfg.num_nodes == n.nid]
+            n.boot(pids)
+        for t, nid, rt in zip(
+            scenario.fail_times_ms, scenario.fail_nodes, scenario.restart_times_ms
+        ):
+            self.sim.at(t, lambda n=nid: self.nodes[n].fail())
+            if rt >= 0:
+                self.sim.at(rt, lambda n=nid: self.nodes[n].restart())
+        horizon = horizon_ms if horizon_ms is not None else self.cfg.horizon_ms + 5000.0
+        self.sim.run(until=horizon)
+        return self.consumer
+
+
+def run_holon(
+    cfg: SimConfig, query: Query, scenario: FailureScenario | None = None,
+    horizon_ms: float | None = None, log: EventBatch | None = None,
+) -> Consumer:
+    h = HolonHarness(cfg, query, log=log)
+    return h.run(scenario, horizon_ms)

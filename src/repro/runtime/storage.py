@@ -1,0 +1,41 @@
+"""Remote checkpoint storage (the paper's ``storage.put/get``).
+
+Durable key→blob store with modeled RTT.  Values are host pytrees (device
+arrays are fine — they are immutable).  Merge-on-put keeps the largest
+``nxt_idx`` per Algorithm 2's lattice rule, so concurrent checkpointers of the
+same partition (allowed by the paper) can never regress a checkpoint.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+
+@dataclasses.dataclass
+class PartitionCheckpoint:
+    nxt_idx: int  # next input-log index to read
+    nxt_odx: int  # next output index
+    emitted_upto: int  # first window id not yet emitted
+    shared: Any  # tuple[WState, ...] replica snapshot
+    local: Any  # WLocal state (or None)
+
+
+class CheckpointStorage:
+    def __init__(self):
+        self._data: dict[int, PartitionCheckpoint] = {}
+        self.puts = 0
+        self.gets = 0
+
+    def put(self, pid: int, ckpt: PartitionCheckpoint) -> None:
+        self.puts += 1
+        cur = self._data.get(pid)
+        # Algorithm 2: lattice merge keeps the state with the largest nxtIdx.
+        if cur is None or ckpt.nxt_idx >= cur.nxt_idx:
+            self._data[pid] = ckpt
+
+    def get(self, pid: int) -> PartitionCheckpoint | None:
+        self.gets += 1
+        return self._data.get(pid)
+
+    def has(self, pid: int) -> bool:
+        return pid in self._data

@@ -1,0 +1,294 @@
+"""Nexmark global-aggregation queries over Windowed CRDTs (paper §5.1).
+
+Each query is a :class:`Query`: per-partition replica state split into
+
+* ``shared`` — a tuple of WCRDT replicas (synchronized by lattice joins in the
+  background, never by shuffles), and
+* ``local``  — partition-local windowed state (the paper's ``WLocal``; realized
+  as a WCRDT with a single progress entry, i.e. ``P=1``).
+
+``fold`` consumes one input batch (insert + increment_watermark), ``merge``
+joins two replicas' shared parts, ``read`` returns a completed window's value.
+The queries:
+
+* **Q0**  pass-through (stateless; per-window event counts via WLocal).
+* **Q4**  average price per category — global keyed aggregation *without* a
+  shuffle: per-category sum and count lattices.
+* **Q7**  highest bids — global top-k lattice per window.
+* **Q1-ratio** — the paper's running example (Listing 2): partition-local bid
+  count over global bid count.
+
+Every query also ships an ``oracle``: the same aggregation computed directly
+over the whole log with plain jnp — the ground truth for exactly-once and
+determinism tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import wcrdt as W
+from repro.core.wcrdt import WSpec, WState
+from repro.streaming.events import KIND_BID, EventBatch
+from repro.streaming.generator import NUM_CATEGORIES, batch_watermark
+
+
+@dataclasses.dataclass(frozen=True)
+class Query:
+    name: str
+    num_partitions: int
+    window_len: int
+    shared_specs: tuple[WSpec, ...]
+    local_spec: WSpec | None
+    init_shared: Callable[[], tuple[WState, ...]]
+    init_local: Callable[[], WState | None]
+    fold: Callable[..., tuple[tuple[WState, ...], WState | None]]
+    read: Callable[..., tuple[Any, jax.Array]]
+    oracle: Callable[..., Any]
+    out_width: int  # flattened f32 output lanes per (partition, window)
+
+    # ---- generic helpers ----
+    def merge_shared(self, a: tuple[WState, ...], b: tuple[WState, ...]):
+        return tuple(
+            W.merge(spec, x, y) for spec, x, y in zip(self.shared_specs, a, b)
+        )
+
+    def global_watermark(self, shared, local) -> jax.Array:
+        if self.shared_specs:
+            return W.global_watermark(self.shared_specs[0], shared[0])
+        return W.global_watermark(self.local_spec, local)
+
+    def window_of(self, ts):
+        return jnp.asarray(ts, jnp.int32) // jnp.int32(self.window_len)
+
+
+def _mk_local_spec(kind: str, window_len: int, num_slots: int, **kw) -> WSpec:
+    ctor = {"gcounter": W.wgcounter, "maxreg": W.wmaxreg}[kind]
+    return ctor(window_len, num_slots, 1, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Q0: pass-through
+# ---------------------------------------------------------------------------
+
+
+def make_q0(num_partitions: int, window_len: int = 1000, num_slots: int = 16) -> Query:
+    lspec = _mk_local_spec("gcounter", window_len, num_slots)
+
+    def init_local():
+        return lspec.zero()
+
+    def fold(shared, local, batch: EventBatch, partition, batch_idx=None):
+        amounts = jnp.ones_like(batch.price)
+        local = W.insert(
+            lspec, local, 0, batch.ts, batch.valid, batch_idx=batch_idx,
+            actor=0, amounts=amounts,
+        )
+        local = W.increment_watermark(lspec, local, 0, batch_watermark(batch))
+        return shared, local
+
+    def read(shared, local, wid):
+        v, ok = W.window_value(lspec, local, wid)
+        return jnp.reshape(v, (1,)), ok
+
+    def oracle(log: EventBatch, wid, partition=None):
+        m = log.valid & (log.ts // window_len == wid)
+        if partition is not None:
+            m = m[partition]
+        return jnp.sum(m.astype(jnp.float32))
+
+    return Query(
+        name="q0",
+        num_partitions=num_partitions,
+        window_len=window_len,
+        shared_specs=(),
+        local_spec=lspec,
+        init_shared=lambda: (),
+        init_local=init_local,
+        fold=fold,
+        read=read,
+        oracle=oracle,
+        out_width=1,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Q4: average price per category (global, keyed, no shuffle)
+# ---------------------------------------------------------------------------
+
+
+def make_q4(
+    num_partitions: int,
+    window_len: int = 1000,
+    num_slots: int = 16,
+    num_categories: int = NUM_CATEGORIES,
+) -> Query:
+    sum_spec = W.wgcounter(window_len, num_slots, num_partitions, key_shape=(num_categories,))
+    cnt_spec = W.wgcounter(window_len, num_slots, num_partitions, key_shape=(num_categories,))
+
+    def init_shared():
+        return (sum_spec.zero(), cnt_spec.zero())
+
+    def fold(shared, local, batch: EventBatch, partition, batch_idx=None):
+        s, c = shared
+        is_bid = batch.valid & (batch.kind == KIND_BID)
+        wm = batch_watermark(batch)
+        s = W.insert(
+            sum_spec, s, partition, batch.ts, is_bid, batch_idx=batch_idx,
+            actor=partition, amounts=batch.price, keys=batch.category,
+        )
+        s = W.increment_watermark(sum_spec, s, partition, wm)
+        c = W.insert(
+            cnt_spec, c, partition, batch.ts, is_bid, batch_idx=batch_idx,
+            actor=partition, amounts=jnp.ones_like(batch.price), keys=batch.category,
+        )
+        c = W.increment_watermark(cnt_spec, c, partition, wm)
+        return (s, c), local
+
+    def read(shared, local, wid):
+        s, c = shared
+        sv, ok1 = W.window_value(sum_spec, s, wid)
+        cv, ok2 = W.window_value(cnt_spec, c, wid)
+        avg = sv / jnp.maximum(cv, 1.0)
+        return avg, ok1 & ok2
+
+    def oracle(log: EventBatch, wid, partition=None):
+        m = log.valid & (log.kind == KIND_BID) & (log.ts // window_len == wid)
+        cat_onehot = jax.nn.one_hot(log.category, num_categories, dtype=jnp.float32)
+        w = m.astype(jnp.float32)[..., None] * cat_onehot
+        sums = jnp.sum(w * log.price[..., None], axis=tuple(range(w.ndim - 1)))
+        cnts = jnp.sum(w, axis=tuple(range(w.ndim - 1)))
+        return sums / jnp.maximum(cnts, 1.0)
+
+    return Query(
+        name="q4",
+        num_partitions=num_partitions,
+        window_len=window_len,
+        shared_specs=(sum_spec, cnt_spec),
+        local_spec=None,
+        init_shared=init_shared,
+        init_local=lambda: None,
+        fold=fold,
+        read=read,
+        oracle=oracle,
+        out_width=num_categories,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Q7: highest bids (global top-k per window)
+# ---------------------------------------------------------------------------
+
+
+def make_q7(
+    num_partitions: int, window_len: int = 1000, num_slots: int = 16, k: int = 8,
+    topk_active: int = 4,
+) -> Query:
+    """``topk_active``: window offsets folded per batch.  A partition-ordered
+    batch spans ceil(batch_span/window_len)+1 windows; 2 suffices for the
+    default rates (batch span ~0.1-0.2 windows) and is 1.7x faster than 8
+    (EXPERIMENTS.md §Perf iteration C); 4 is the safe default."""
+    topk_spec = W.wtopk(window_len, num_slots, num_partitions, k, max_active_windows=topk_active)
+
+    def init_shared():
+        return (topk_spec.zero(),)
+
+    def fold(shared, local, batch: EventBatch, partition, batch_idx=None):
+        (t,) = shared
+        is_bid = batch.valid & (batch.kind == KIND_BID)
+        t = W.insert(
+            topk_spec, t, partition, batch.ts, is_bid, batch_idx=batch_idx,
+            vals=batch.price, ids=batch.auction,
+        )
+        t = W.increment_watermark(topk_spec, t, partition, batch_watermark(batch))
+        return (t,), local
+
+    def read(shared, local, wid):
+        (t,) = shared
+        (vals, ids), ok = W.window_value(topk_spec, t, wid)
+        out = jnp.concatenate([vals, ids.astype(jnp.float32)])
+        return out, ok
+
+    def oracle(log: EventBatch, wid, partition=None):
+        m = log.valid & (log.kind == KIND_BID) & (log.ts // window_len == wid)
+        prices = jnp.where(m, log.price, -jnp.inf).reshape(-1)
+        ids = jnp.where(m, log.auction, 0).reshape(-1)
+        sv, si = jax.lax.sort((prices, ids.astype(jnp.uint32)), dimension=-1, num_keys=2)
+        return sv[-k:][::-1], si[-k:][::-1]
+
+    return Query(
+        name="q7",
+        num_partitions=num_partitions,
+        window_len=window_len,
+        shared_specs=(topk_spec,),
+        local_spec=None,
+        init_shared=init_shared,
+        init_local=lambda: None,
+        fold=fold,
+        read=read,
+        oracle=oracle,
+        out_width=2 * k,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Query 1 (paper Listing 2): local/global bid-count ratio
+# ---------------------------------------------------------------------------
+
+
+def make_q1_ratio(
+    num_partitions: int, window_len: int = 1000, num_slots: int = 16
+) -> Query:
+    gspec = W.wgcounter(window_len, num_slots, num_partitions)
+    lspec = _mk_local_spec("gcounter", window_len, num_slots)
+
+    def init_shared():
+        return (gspec.zero(),)
+
+    def init_local():
+        return lspec.zero()
+
+    def fold(shared, local, batch: EventBatch, partition, batch_idx=None):
+        (g,) = shared
+        is_bid = batch.valid & (batch.kind == KIND_BID)
+        wm = batch_watermark(batch)
+        ones = jnp.ones_like(batch.price)
+        g = W.insert(gspec, g, partition, batch.ts, is_bid, batch_idx=batch_idx,
+                     actor=partition, amounts=ones)
+        g = W.increment_watermark(gspec, g, partition, wm)
+        local = W.insert(lspec, local, 0, batch.ts, is_bid, batch_idx=batch_idx,
+                         actor=0, amounts=ones)
+        local = W.increment_watermark(lspec, local, 0, wm)
+        return (g,), local
+
+    def read(shared, local, wid):
+        (g,) = shared
+        gv, ok1 = W.window_value(gspec, g, wid)
+        lv, ok2 = W.window_value(lspec, local, wid)
+        ratio = lv / jnp.maximum(gv, 1.0)
+        return jnp.reshape(ratio, (1,)), ok1 & ok2
+
+    def oracle(log: EventBatch, wid, partition=None):
+        m = log.valid & (log.kind == KIND_BID) & (log.ts // window_len == wid)
+        total = jnp.sum(m.astype(jnp.float32))
+        if partition is None:
+            return total
+        loc = jnp.sum(m[partition].astype(jnp.float32))
+        return loc / jnp.maximum(total, 1.0)
+
+    return Query(
+        name="q1_ratio",
+        num_partitions=num_partitions,
+        window_len=window_len,
+        shared_specs=(gspec,),
+        local_spec=lspec,
+        init_shared=init_shared,
+        init_local=init_local,
+        fold=fold,
+        read=read,
+        oracle=oracle,
+        out_width=1,
+    )

@@ -1,0 +1,15 @@
+from repro.training.optimizer import AdamWState, adamw_init, adamw_update
+from repro.training.train_step import make_train_step, make_serve_step
+from repro.training.metrics import MetricSpec, metrics_init, metrics_fold, metrics_read
+
+__all__ = [
+    "AdamWState",
+    "adamw_init",
+    "adamw_update",
+    "make_train_step",
+    "make_serve_step",
+    "MetricSpec",
+    "metrics_init",
+    "metrics_fold",
+    "metrics_read",
+]

@@ -1,0 +1,88 @@
+"""Decentralized checkpointing — Algorithm 2's ``sometimes do storage.put``
+applied to training state.
+
+Every worker persists its own shard ``(step, params, opt, metrics, data_idx)``
+on its own schedule; no barrier, no coordinator.  The store applies the
+paper's lattice rule (largest ``step`` wins per shard key), so concurrent or
+straggling writers can never regress a checkpoint.  Restore + deterministic
+data order (seeded, indexable stream) + idempotent metric folds give
+exactly-once training-step semantics after any crash (tested in
+tests/test_train_loop.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import pickle
+from pathlib import Path
+from typing import Any
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass
+class TrainCheckpoint:
+    step: int
+    data_idx: int
+    params: Any
+    opt: Any
+    metrics: Any
+    rng_seed: int
+
+
+class LocalStore:
+    """Filesystem store; one blob per (worker/partition) key.
+
+    put() keeps the largest-step blob (Algorithm 2 merge rule).
+    """
+
+    def __init__(self, root: str | Path):
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+
+    def _path(self, key: str) -> Path:
+        return self.root / f"{key}.ckpt"
+
+    def put(self, key: str, ckpt: TrainCheckpoint) -> bool:
+        cur = self.get_step(key)
+        if cur is not None and cur > ckpt.step:
+            return False
+        blob = {
+            "step": ckpt.step,
+            "data_idx": ckpt.data_idx,
+            "rng_seed": ckpt.rng_seed,
+            "params": jax.tree.map(np.asarray, ckpt.params),
+            "opt": jax.tree.map(np.asarray, ckpt.opt),
+            "metrics": jax.tree.map(np.asarray, ckpt.metrics),
+        }
+        tmp = self._path(key).with_suffix(".tmp")
+        with open(tmp, "wb") as f:
+            pickle.dump(blob, f)
+        tmp.rename(self._path(key))  # atomic publish
+        return True
+
+    def get(self, key: str) -> TrainCheckpoint | None:
+        p = self._path(key)
+        if not p.exists():
+            return None
+        with open(p, "rb") as f:
+            blob = pickle.load(f)
+        import jax.numpy as jnp
+
+        to_dev = lambda t: jax.tree.map(jnp.asarray, t)
+        return TrainCheckpoint(
+            step=blob["step"],
+            data_idx=blob["data_idx"],
+            rng_seed=blob["rng_seed"],
+            params=to_dev(blob["params"]),
+            opt=to_dev(blob["opt"]),
+            metrics=to_dev(blob["metrics"]),
+        )
+
+    def get_step(self, key: str) -> int | None:
+        p = self._path(key)
+        if not p.exists():
+            return None
+        with open(p, "rb") as f:
+            blob = pickle.load(f)
+        return blob["step"]

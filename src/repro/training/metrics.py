@@ -1,0 +1,111 @@
+"""WCRDT-backed training metrics — the paper's technique as a first-class
+framework feature (DESIGN.md §4).
+
+Training is an infinite stream of steps partitioned over data-parallel
+workers.  Global metric aggregation (mean loss, token throughput, max grad
+norm) is a *global aggregation over that stream* — precisely the paper's
+problem.  Instead of a blocking all-reduce on the critical path or a
+centralized metrics server, every worker owns a replica of a windowed metric
+lattice:
+
+  * window      = ``window_len`` consecutive steps ("timestamp" = step id),
+  * loss_sum /
+    token_count = windowed grow-only counters (per-worker slots, max-merged),
+  * grad_norm   = windowed max-register,
+  * progress    = per-worker step watermark.
+
+Replicas merge in the background (host gossip thread, or one lattice
+all-reduce per sync period on the pod).  A metric window is readable exactly
+when the global watermark (min worker step) passes it — at which point every
+worker reads the *same, final* value: deterministic dashboards, deterministic
+early-stopping decisions, no barrier, straggler-tolerant.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import wcrdt as W
+from repro.core.wcrdt import WSpec, WState
+
+
+@dataclasses.dataclass(frozen=True)
+class MetricSpec:
+    num_workers: int
+    window_len: int = 10  # steps per metric window
+    num_slots: int = 8
+
+    def specs(self) -> dict[str, WSpec]:
+        return {
+            "loss_sum": W.wgcounter(self.window_len, self.num_slots, self.num_workers),
+            "tokens": W.wgcounter(self.window_len, self.num_slots, self.num_workers),
+            "gnorm_max": W.wmaxreg(self.window_len, self.num_slots, self.num_workers),
+        }
+
+
+def metrics_init(spec: MetricSpec) -> dict[str, WState]:
+    return {k: s.zero() for k, s in spec.specs().items()}
+
+
+def metrics_fold(
+    spec: MetricSpec,
+    state: dict[str, WState],
+    worker,
+    step,
+    loss: jax.Array,
+    n_tokens: jax.Array,
+    grad_norm: jax.Array,
+) -> dict[str, WState]:
+    """Fold one step's local metrics; advance this worker's watermark."""
+    specs = spec.specs()
+    ts = jnp.asarray(step, jnp.int32)[None]
+    one = jnp.ones((1,), jnp.bool_)
+    out = dict(state)
+    out["loss_sum"] = W.insert(
+        specs["loss_sum"], state["loss_sum"], worker, ts, one,
+        actor=worker, amounts=jnp.reshape(loss, (1,)).astype(jnp.float32),
+    )
+    out["tokens"] = W.insert(
+        specs["tokens"], state["tokens"], worker, ts, one,
+        actor=worker, amounts=jnp.reshape(n_tokens, (1,)).astype(jnp.float32),
+    )
+    out["gnorm_max"] = W.insert(
+        specs["gnorm_max"], state["gnorm_max"], worker, ts, one,
+        vals=jnp.reshape(grad_norm, (1,)).astype(jnp.float32),
+    )
+    # watermark: this worker will never again contribute to steps <= step
+    nxt = jnp.asarray(step, jnp.int32) + 1
+    for k in out:
+        out[k] = W.increment_watermark(specs[k], out[k], worker, nxt)
+    return out
+
+
+def metrics_merge(spec: MetricSpec, a: dict[str, WState], b: dict[str, WState]):
+    specs = spec.specs()
+    return {k: W.merge(specs[k], a[k], b[k]) for k in a}
+
+
+def metrics_axis_join(spec: MetricSpec, state: dict[str, WState], axis_name: str):
+    """On-pod variant: one lattice all-reduce merges every worker's replica.
+    Step-windows are lockstep across workers, so the aligned fast path rides
+    pure pmax/pmin (no gather buffer)."""
+    specs = spec.specs()
+    return {k: W.axis_join_aligned(specs[k], state[k], axis_name) for k in state}
+
+
+def metrics_read(spec: MetricSpec, state: dict[str, WState], window: int):
+    """Read a completed metric window: (dict, ok).  Deterministic across
+    workers once ok=True."""
+    specs = spec.specs()
+    loss_sum, ok1 = W.window_value(specs["loss_sum"], state["loss_sum"], window)
+    tokens, ok2 = W.window_value(specs["tokens"], state["tokens"], window)
+    gmax, ok3 = W.window_value(specs["gnorm_max"], state["gnorm_max"], window)
+    steps = spec.window_len * spec.num_workers
+    out = {
+        "mean_loss": loss_sum / jnp.maximum(steps, 1),
+        "tokens": tokens,
+        "grad_norm_max": gmax,
+    }
+    return out, ok1 & ok2 & ok3

@@ -1,0 +1,68 @@
+"""AdamW with fp32 master moments, built from scratch (no optax dependency).
+
+Moments are stored fp32 and shard exactly like their parameters (the launch
+layer assigns a sharding per param leaf and tree-maps it onto the optimizer
+state), giving ZeRO-ish partitioned optimizer state for free under GSPMD.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWState:
+    step: jax.Array  # i32 scalar
+    mu: Any  # fp32, like params
+    nu: Any  # fp32, like params
+
+
+jax.tree_util.register_dataclass(AdamWState, data_fields=["step", "mu", "nu"], meta_fields=[])
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros, nu=jax.tree.map(jnp.copy, zeros))
+
+
+def adamw_update(
+    params,
+    grads,
+    state: AdamWState,
+    *,
+    lr: float = 3e-4,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    grad_clip: float = 1.0,
+):
+    """Returns (new_params, new_state, grad_norm)."""
+    # global-norm clip in fp32
+    g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    gnorm = jnp.sqrt(
+        sum(jnp.sum(jnp.square(g)) for g in jax.tree.leaves(g32)) + 1e-20
+    )
+    scale = jnp.minimum(1.0, grad_clip / gnorm)
+    g32 = jax.tree.map(lambda g: g * scale, g32)
+
+    step = state.step + 1
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        m = b1 * m + (1.0 - b1) * g
+        v = b2 * v + (1.0 - b2) * jnp.square(g)
+        mhat = m / c1
+        vhat = v / c2
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, params, g32, state.mu, state.nu)
+    new_p = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    return new_p, AdamWState(step=step, mu=new_m, nu=new_v), gnorm

@@ -1,0 +1,98 @@
+"""Step factories: the jit-able train / prefill / decode steps the launcher
+and the dry-run lower.
+
+``make_train_step`` closes over the ArchConfig and optimizer hyperparams and
+returns ``step(params, opt, batch) -> (params, opt, stats)`` — forward loss
+(remat'd scan), backward, global-norm clip, AdamW.  ``stats`` carries the
+scalars the WCRDT metric lattice folds (loss, tokens, grad-norm).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import lm
+from repro.training.optimizer import AdamWState, adamw_update
+
+
+def make_train_step(
+    cfg: ArchConfig,
+    *,
+    lr: float = 3e-4,
+    weight_decay: float = 0.1,
+    grad_clip: float = 1.0,
+    q_chunk: int = 512,
+    ssm_chunk: int = 256,
+    remat: bool = True,
+    grad_accum: int = 1,
+) -> Callable:
+    def loss_fn(params, batch):
+        return lm.forward_loss(
+            cfg, params, batch, q_chunk=q_chunk, ssm_chunk=ssm_chunk, remat=remat
+        )
+
+    def one_grad(params, batch):
+        return jax.value_and_grad(loss_fn)(params, batch)
+
+    def step(params, opt: AdamWState, batch: dict):
+        if grad_accum > 1:
+            # microbatch over the leading batch axis
+            def split(x):
+                B = x.shape[0]
+                return x.reshape(grad_accum, B // grad_accum, *x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+
+            def body(carry, mb):
+                acc_loss, acc_grads = carry
+                l, g = one_grad(params, mb)
+                return (
+                    acc_loss + l,
+                    jax.tree.map(lambda a, b: a + b.astype(jnp.float32), acc_grads, g),
+                ), None
+
+            zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (tot_loss, grads), _ = jax.lax.scan(body, (jnp.float32(0), zero_g), micro)
+            loss = tot_loss / grad_accum
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+        else:
+            loss, grads = one_grad(params, batch)
+
+        new_params, new_opt, gnorm = adamw_update(
+            params, grads, opt, lr=lr, weight_decay=weight_decay, grad_clip=grad_clip
+        )
+        n_tokens = jnp.asarray(batch["tokens"].size, jnp.float32)
+        stats = {"loss": loss, "tokens": n_tokens, "grad_norm": gnorm}
+        return new_params, new_opt, stats
+
+    return step
+
+
+def make_serve_step(cfg: ArchConfig) -> Callable:
+    """decode: (params, cache, token, position[, enc_kv]) -> (logits, cache)."""
+
+    def step(params, cache, token, position, enc_kv=None):
+        return lm.decode_step(cfg, params, cache, token, position, enc_kv=enc_kv)
+
+    return step
+
+
+def make_prefill_step(cfg: ArchConfig, *, q_chunk: int = 512, ssm_chunk: int = 256):
+    if cfg.is_enc_dec:
+
+        def step(params, enc_embeds, tokens):
+            return lm.prefill_encdec(cfg, params, enc_embeds, tokens, q_chunk=q_chunk)
+
+    else:
+
+        def step(params, tokens, prefix_embeds=None):
+            return lm.prefill(
+                cfg, params, tokens, prefix_embeds=prefix_embeds,
+                q_chunk=q_chunk, ssm_chunk=ssm_chunk,
+            )
+
+    return step

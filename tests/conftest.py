@@ -1,0 +1,6 @@
+# NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see ONE
+# CPU device.  The 512-device environment exists only inside
+# repro.launch.dryrun (and the subprocess spawned by test_dryrun_mini).
+import jax
+
+jax.config.update("jax_platform_name", "cpu")

@@ -1,0 +1,62 @@
+"""Integration test of the dry-run machinery on a tiny mesh in a subprocess
+(the 512-device flag must not leak into this test session)."""
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+SRC = Path(__file__).resolve().parents[1] / "src"
+
+SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.launch import shardings as sh
+    from repro.launch.mesh import make_mesh
+    from repro.launch.hlo_analysis import analyze
+    from repro.models import lm, flags
+    from repro.training.train_step import make_train_step
+    from repro.training.optimizer import AdamWState
+
+    flags.set_tp_pad(2)
+    cfg = get_config("deepseek_7b").reduced()
+    mesh = make_mesh((4, 2), ("data", "model"))
+    abs_params = jax.eval_shape(lambda k: lm.init_params(cfg, k, jnp.float32), jax.random.PRNGKey(0))
+    p_shard = sh.shard_params(abs_params, mesh, cfg)
+    toks = jax.ShapeDtypeStruct((8, 64), jnp.int32)
+    in_shard = sh.shard_inputs({"tokens": toks}, mesh)
+    abs_opt = jax.eval_shape(
+        lambda p: AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), p),
+            nu=jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), p),
+        ),
+        abs_params,
+    )
+    opt_shard = AdamWState(step=sh.replicated(mesh), mu=p_shard, nu=p_shard)
+    step = make_train_step(cfg, q_chunk=32, ssm_chunk=16)
+    with mesh:
+        lowered = jax.jit(step, in_shardings=(p_shard, opt_shard, in_shard)).lower(
+            abs_params, abs_opt, {"tokens": toks}
+        )
+        compiled = lowered.compile()
+    mem = compiled.memory_analysis()
+    res = analyze(compiled.as_text())
+    assert res["flops"] > 0, "trip-count-aware flops should be nonzero"
+    assert res["collective_bytes"]["total"] > 0, "TP psums expected"
+    print("MINI_DRYRUN_OK", res["flops"], res["collective_bytes"]["total"])
+    """
+)
+
+
+def test_mini_dryrun_subprocess():
+    r = subprocess.run(
+        [sys.executable, "-c", SCRIPT],
+        capture_output=True,
+        text=True,
+        timeout=600,
+        env={"PYTHONPATH": str(SRC), "PATH": "/usr/bin:/bin", "HOME": "/root"},
+    )
+    assert "MINI_DRYRUN_OK" in r.stdout, f"stdout={r.stdout[-2000:]}\nstderr={r.stderr[-2000:]}"

@@ -1,0 +1,135 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step and a
+prefill+decode step on CPU, asserting shapes and finiteness (assignment
+requirement).  The FULL configs are exercised only by the dry-run."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs
+from repro.models import (
+    cache_spec,
+    decode_step,
+    forward_loss,
+    init_params,
+    prefill,
+    prefill_encdec,
+)
+from repro.training import adamw_init
+from repro.training.train_step import make_train_step
+
+ARCHS = list_archs()
+
+
+def _batch(cfg, key, B=2, S=64):
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    batch = {"tokens": toks}
+    if cfg.family == "audio":
+        batch["enc_embeds"] = jax.random.normal(key, (B, S, cfg.d_model), jnp.float32)
+    if cfg.family == "vlm":
+        batch["prefix_embeds"] = jax.random.normal(key, (B, 16, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_loss_finite(arch):
+    cfg = get_config(arch).reduced()
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key, dtype=jnp.float32)
+    batch = _batch(cfg, key)
+    loss = jax.jit(lambda p, b: forward_loss(cfg, p, b, q_chunk=32, ssm_chunk=16))(params, batch)
+    assert loss.shape == ()
+    assert jnp.isfinite(loss), f"{arch} loss={loss}"
+    assert 1.0 < float(loss) < 20.0  # ~ln(vocab) at init
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_updates_params(arch):
+    cfg = get_config(arch).reduced()
+    key = jax.random.PRNGKey(1)
+    params = init_params(cfg, key, dtype=jnp.float32)
+    opt = adamw_init(params)
+    step = jax.jit(make_train_step(cfg, q_chunk=32, ssm_chunk=16, lr=1e-3))
+    batch = _batch(cfg, key)
+    new_params, new_opt, stats = step(params, opt, batch)
+    assert jnp.isfinite(stats["loss"])
+    assert jnp.isfinite(stats["grad_norm"]) and float(stats["grad_norm"]) > 0
+    assert int(new_opt.step) == 1
+    # at least one parameter actually moved
+    moved = any(
+        not np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(new_params))
+    )
+    assert moved, f"{arch}: no parameter changed"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_shapes(arch):
+    cfg = get_config(arch).reduced()
+    key = jax.random.PRNGKey(2)
+    params = init_params(cfg, key, dtype=jnp.float32)
+    B, S = 2, 64
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    if cfg.family == "audio":
+        enc = jax.random.normal(key, (B, S, cfg.d_model), jnp.float32)
+        logits, cache, enc_kv = jax.jit(
+            lambda p, e, t: prefill_encdec(cfg, p, e, t, q_chunk=32)
+        )(params, enc, toks)
+        assert logits.shape == (B, 1, cfg.vocab)
+        lg, cache = jax.jit(lambda p, c, t, e: decode_step(cfg, p, c, t, S, enc_kv=e))(
+            params, cache, toks[:, :1], enc_kv
+        )
+    else:
+        logits, cache = jax.jit(lambda p, t: prefill(cfg, p, t, q_chunk=32, ssm_chunk=16))(
+            params, toks
+        )
+        assert logits.shape == (B, 1, cfg.vocab)
+        lg, cache = jax.jit(lambda p, c, t: decode_step(cfg, p, c, t, S))(
+            params, cache, toks[:, :1]
+        )
+    assert lg.shape == (B, 1, cfg.vocab)
+    assert jnp.all(jnp.isfinite(lg)), arch
+
+
+def test_decode_matches_prefill_next_token():
+    """Decoding the last prompt token against a cache prefilled with the
+    preceding tokens reproduces the teacher-forced (prefill) logits."""
+    cfg = get_config("deepseek_7b").reduced()
+    key = jax.random.PRNGKey(3)
+    params = init_params(cfg, key, dtype=jnp.float32)
+    B, S = 1, 32
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    # teacher-forced logits at the last position
+    logits_pre, _ = prefill(cfg, params, toks, q_chunk=16)
+    # prefill S-1 tokens, pad the cache time axis to S, decode token S-1
+    _, cache = prefill(cfg, params, toks[:, : S - 1], q_chunk=16)
+    cache = jax.tree.map(
+        lambda x: jnp.pad(x, [(0, 0), (0, 0), (0, 1), (0, 0), (0, 0)])
+        if x.ndim == 5
+        else x,
+        cache,
+    )
+    lg, _ = decode_step(cfg, params, cache, toks[:, S - 1 :], S - 1)
+    np.testing.assert_allclose(
+        np.asarray(lg[0, 0]), np.asarray(logits_pre[0, 0]), rtol=2e-3, atol=2e-3
+    )
+
+
+def test_exact_config_fields():
+    """The full (non-reduced) configs carry the assigned hyperparameters."""
+    spec = {
+        "minitron_4b": dict(n_layers=32, d_model=3072, n_heads=24, n_kv_heads=8, d_ff=9216, vocab=256_000),
+        "deepseek_7b": dict(n_layers=30, d_model=4096, n_heads=32, n_kv_heads=32, d_ff=11008, vocab=102_400),
+        "deepseek_coder_33b": dict(n_layers=62, d_model=7168, n_heads=56, n_kv_heads=8, d_ff=19200, vocab=32_256),
+        "mistral_large_123b": dict(n_layers=88, d_model=12288, n_heads=96, n_kv_heads=8, d_ff=28672, vocab=32_768),
+        "llama4_scout_17b_a16e": dict(n_layers=48, d_model=5120, n_heads=40, n_kv_heads=8, vocab=202_048, moe_experts=16, moe_top_k=1),
+        "qwen3_moe_235b_a22b": dict(n_layers=94, d_model=4096, n_heads=64, n_kv_heads=4, vocab=151_936, moe_experts=128, moe_top_k=8, moe_d_ff=1536),
+        "zamba2_7b": dict(n_layers=81, d_model=3584, n_heads=32, d_ff=14336, vocab=32_000, ssm_state=64),
+        "falcon_mamba_7b": dict(n_layers=64, d_model=4096, vocab=65_024, ssm_state=16),
+        "seamless_m4t_large_v2": dict(d_model=1024, n_heads=16, d_ff=8192, vocab=256_206),
+        "pixtral_12b": dict(n_layers=40, d_model=5120, n_heads=32, n_kv_heads=8, d_ff=14336, vocab=131_072),
+    }
+    for arch, fields in spec.items():
+        cfg = get_config(arch)
+        for k, v in fields.items():
+            assert getattr(cfg, k) == v, f"{arch}.{k}: {getattr(cfg, k)} != {v}"
