@@ -56,10 +56,16 @@ def main(quick: bool = False):
             if name == "baseline":
                 base_avg[system] = s["avg"]
             rec = recovery_time_ms(c, base_avg.get(system, s["avg"]), cfg.window_len)
+            # delta-sync bandwidth (holon only): bytes shipped vs what
+            # full-state broadcast would have cost over the same run
+            sync_mb = getattr(c, "sync_bytes", 0.0) / 1e6
+            sync_full_mb = getattr(c, "sync_bytes_full", 0.0) / 1e6
+            nacks = getattr(c, "sync_nacks", 0)
             emit(
                 f"fig6_table2/{system}/{name}",
                 tm.dt * 1e6,
-                f"avg_ms={s['avg']:.0f};p99_ms={s['p99']:.0f};n={s['n']};recovery_ms={rec:.0f}",
+                f"avg_ms={s['avg']:.0f};p99_ms={s['p99']:.0f};n={s['n']};recovery_ms={rec:.0f};"
+                f"sync_mb={sync_mb:.2f};full_sync_mb={sync_full_mb:.2f};sync_nacks={nacks}",
             )
 
     # headline paper ratios

@@ -18,23 +18,33 @@ from benchmarks.common import emit, timer
 from repro.streaming import NexmarkConfig, generate_log, make_q0, make_q1_ratio, make_q4, make_q7
 
 
-def real_dataplane_rate(query_name: str, batches: int = 32, epb: int = 2048) -> float:
+def real_dataplane_rate(
+    query_name: str, batches: int = 32, epb: int = 2048, sync_every: int = 4,
+    delta_sync: bool = True,
+) -> tuple[float, float, float]:
+    """Returns (events/s, measured sync bytes per round per device, and the
+    full-replica bytes a full-state round would ship — the delta's comparand,
+    a constant of the query's specs)."""
+    from repro import compat
+    from repro.core import wcrdt as W
     from repro.launch.stream import MAKERS, build_pipeline
 
     n_dev = 1
-    mesh = jax.make_mesh((n_dev,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((n_dev,), ("data",))
     nx = NexmarkConfig(num_partitions=n_dev, num_batches=batches, events_per_batch=epb)
     log = generate_log(nx)
     query = MAKERS[query_name](n_dev, window_len=1000, num_slots=64)
+    full_bytes = sum(W.state_nbytes(st) for st in query.init_shared())
     with mesh:
-        pipe = build_pipeline(query, mesh, sync_every=4)
-        oks, _ = pipe(log)
+        pipe = build_pipeline(query, mesh, sync_every=sync_every, delta_sync=delta_sync)
+        oks, _, sb = pipe(log)
         jax.block_until_ready(oks)
         t0 = time.time()
-        oks, _ = pipe(log)
+        oks, _, sb = pipe(log)
         jax.block_until_ready(oks)
         dt = time.time() - t0
-    return batches * epb / dt
+    rounds = max(batches // sync_every, 1)
+    return batches * epb / dt, float(np.asarray(sb).mean()) / rounds, full_bytes
 
 
 def sim_peak(query_maker, shuffle_cost_per_event_ms: float = 0.0) -> tuple[float, float]:
@@ -56,11 +66,21 @@ def sim_peak(query_maker, shuffle_cost_per_event_ms: float = 0.0) -> tuple[float
 
 
 def main(quick: bool = False):
-    # real dataplane rates (wall clock, this host)
+    # real dataplane rates (wall clock, this host) + delta-sync bandwidth:
+    # measured bytes a gossip transport ships per sync round, vs the
+    # full-state cost (the whole replica — a constant of the query's specs,
+    # so no second compiled run is needed to know it)
     for qn in ("q7", "q4", "q1_ratio"):
+        batches = 16 if quick else 32
         with timer() as tm:
-            rate = real_dataplane_rate(qn, batches=16 if quick else 32)
-        emit(f"throughput/real_dataplane/{qn}", tm.dt * 1e6, f"events_per_s={rate/1e6:.2f}M")
+            rate, delta_bpr, full_bpr = real_dataplane_rate(qn, batches=batches)
+        ratio = full_bpr / max(delta_bpr, 1.0)
+        emit(
+            f"throughput/real_dataplane/{qn}",
+            tm.dt * 1e6,
+            f"events_per_s={rate/1e6:.2f}M;sync_bytes_per_round={delta_bpr:.0f};"
+            f"full_sync_bytes_per_round={full_bpr:.0f};sync_reduction_x={ratio:.1f}",
+        )
 
     # simulated peak capacity, paper's Q4/Q7 comparison
     # per-event shuffle costs calibrated to the paper's measured gaps

@@ -1,0 +1,25 @@
+#!/usr/bin/env bash
+# Tier-1 and marked suites, with PYTHONPATH set the way CI expects.
+#
+#   scripts/test.sh            # tier-1: everything not marked slow/multidevice
+#   scripts/test.sh slow       # the slow suite only
+#   scripts/test.sh multidevice  # multi-device suite under 8 virtual devices
+#   scripts/test.sh all        # tier-1, then slow, then multidevice
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+tier1() { python -m pytest -x -q -m "not slow and not multidevice" "$@"; }
+slow() { python -m pytest -q -m slow "$@"; }
+multidevice() {
+  XLA_FLAGS="--xla_force_host_platform_device_count=8 ${XLA_FLAGS:-}" \
+    python -m pytest -q -m multidevice "$@"
+}
+
+case "${1:-tier1}" in
+  tier1) tier1 "${@:2}" ;;
+  slow) slow "${@:2}" ;;
+  multidevice) multidevice "${@:2}" ;;
+  all) tier1 "${@:2}"; slow "${@:2}"; multidevice "${@:2}" ;;
+  *) echo "usage: $0 [tier1|slow|multidevice|all]" >&2; exit 2 ;;
+esac

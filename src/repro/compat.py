@@ -1,0 +1,35 @@
+"""Version-compat shims for the jax APIs this repo uses.
+
+The codebase targets current jax (``jax.shard_map``, ``jax.lax.pvary``,
+``jax.make_mesh(..., axis_types=...)``); older runtimes (<= 0.4.x) spell
+these differently or lack them.  Everything funnels through here so call
+sites stay on the modern spelling.
+"""
+from __future__ import annotations
+
+import jax
+
+_HAS_NATIVE_SHARD_MAP = hasattr(jax, "shard_map")
+
+
+def shard_map(f, mesh, in_specs, out_specs):
+    if _HAS_NATIVE_SHARD_MAP:
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    from jax.experimental.shard_map import shard_map as _sm
+
+    # old shard_map has no pvary to mark varying outputs; disable rep checks
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False)
+
+
+def pvary(x, axis_names):
+    if hasattr(jax.lax, "pvary"):
+        return jax.lax.pvary(x, axis_names)
+    return x  # pre-vma jax: no device-varying tracking, nothing to mark
+
+
+def make_mesh(shape, axes):
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+        )
+    return jax.make_mesh(shape, axes)

@@ -27,10 +27,17 @@ from repro.core.wcrdt import (
     WState,
     axis_join,
     axis_join_aligned,
+    baseline_of,
+    delta_axis_join,
+    delta_nbytes,
+    delta_since,
     global_watermark,
     increment_watermark,
     insert,
     merge,
+    merge_delta_stack,
+    state_nbytes,
+    zero_baseline,
     wgcounter,
     wgset,
     window_complete,

@@ -368,6 +368,88 @@ def delta_nbytes(delta: WState) -> jax.Array:
     return jnp.sum(dirty) * per_slot + meta
 
 
+def state_nbytes(state: WState) -> float:
+    """Full-replica wire size (every leaf shipped) — the delta's comparand."""
+    return float(sum(l.nbytes for l in jax.tree.leaves(state)))
+
+
+def baseline_of(state: WState) -> tuple[jax.Array, jax.Array]:
+    """The (folded, progress) marker summarizing what ``state`` covers — the
+    receiver-side baseline that ``delta_since`` diffs against."""
+    return (state.folded, state.progress)
+
+
+def zero_baseline(spec: WSpec) -> tuple[np.ndarray, np.ndarray]:
+    """Baseline of a peer known to hold nothing: the next delta is the full
+    resident state."""
+    z = np.zeros((spec.num_partitions,), dtype=np.int32)
+    return (z, z.copy())
+
+
+def merge_delta_stack(
+    spec: WSpec, stacked: WState, use_pallas: bool | None = None,
+    interpret: bool = False,
+) -> WState:
+    """Join an ``[R]``-stacked pile of deltas (from all_gather) slot-aware.
+
+    Elementwise window lattices ride the gated delta-merge kernel: per ring
+    slot, replicas whose tenant window trails the newest (including clean
+    slots, ``slot_wid == -1``) are skipped instead of joined.  Custom window
+    lattices (TopK) fall back to the log-depth vectorized pairwise join.
+    """
+    from repro.core.lattice import field_kinds
+
+    kinds = field_kinds(stacked.windows)
+    if not all(isinstance(k, Reduce) for k in kinds.values()):
+        return join_stacked(stacked, merge_fn=_merge_wstate)
+
+    from repro.kernels.ops import gated_delta_merge
+
+    wid_stack = stacked.slot_wid  # [R, W]
+    merged = {
+        name: jax.tree.map(
+            lambda x, k=kind: gated_delta_merge(
+                wid_stack, x, op=k.value, use_pallas=use_pallas,
+                interpret=interpret,
+            ),
+            getattr(stacked.windows, name),
+        )
+        for name, kind in kinds.items()
+    }
+    return WState(
+        slot_wid=jnp.max(wid_stack, axis=0),
+        windows=type(stacked.windows)(**merged),
+        progress=jnp.max(stacked.progress, axis=0),
+        folded=jnp.max(stacked.folded, axis=0),
+        errors=jnp.max(stacked.errors, axis=0),
+    )
+
+
+def delta_axis_join(
+    spec: WSpec, state: WState, baseline_folded: jax.Array,
+    baseline_progress: jax.Array, axis_name: str,
+    use_pallas: bool | None = None, interpret: bool = False,
+) -> tuple[WState, jax.Array]:
+    """Dirty-slot-gated background sync across ``axis_name``.
+
+    Each replica extracts ``delta_since`` the shared post-last-sync baseline
+    (after a sync round every replica holds the identical merged state, so
+    its delta is exactly its own new contributions), the deltas are
+    all-gathered, and the stack is joined by the gated delta-merge — clean
+    slots are skipped rather than joined.  Returns ``(merged_state,
+    shipped_nbytes)`` where the second is this replica's modeled wire cost
+    (what a real transport would put on the network instead of the full
+    ring; measured by benchmarks/throughput.py).
+    """
+    delta = delta_since(spec, state, baseline_folded, baseline_progress)
+    shipped = delta_nbytes(delta)
+    gathered = jax.tree.map(lambda x: lax.all_gather(x, axis_name), delta)
+    merged = merge_delta_stack(
+        spec, gathered, use_pallas=use_pallas, interpret=interpret
+    )
+    return _merge_wstate(state, merged), shipped
+
+
 
 # ---------------------------------------------------------------------------
 # Spec constructors for the CRDT catalog

@@ -14,6 +14,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.ref import gated_neutral
+
 
 def _kernel(stack_ref, out_ref, *, op: str):
     x = stack_ref[...]  # [R, tile_f]
@@ -47,3 +49,70 @@ def crdt_merge_pallas(
         out_shape=jax.ShapeDtypeStruct((F,), stack.dtype),
         interpret=interpret,
     )(stack)
+
+
+# ---------------------------------------------------------------------------
+# Gated delta merge: slot-aware join of delta-state replicas (DESIGN.md §6).
+#
+# Delta sync ships rings whose untouched slots carry slot_wid = -1 and zero
+# contents.  Joining R such deltas per slot means: replicas whose tenant
+# window trails the per-slot max (stale tenants and clean slots alike) must
+# NOT contribute — their content belongs to an older window.  The kernel
+# loads a [R, tile_w, tile_f] block plus its [R, tile_w] wid block, computes
+# the per-slot winner mask on the VPU, and reduces gated lanes in registers.
+# Blocks whose every slot is clean skip the masked reduce entirely and copy
+# replica 0 (all deltas hold the identical deterministic zero-state there).
+# ---------------------------------------------------------------------------
+
+
+def _gated_kernel(wid_ref, stack_ref, out_ref, *, op: str):
+    wid = wid_ref[...]  # i32[R, tile_w]
+    top = jnp.max(wid, axis=0)  # i32[tile_w]
+    any_dirty = jnp.max(top) >= 0
+
+    @pl.when(any_dirty)
+    def _dirty():
+        x = stack_ref[...]  # [R, tile_w, tile_f]
+        gate = (wid == top[None, :])[..., None]  # [R, tile_w, 1]
+        xg = jnp.where(gate, x, gated_neutral(op, x.dtype))
+        if op == "max":
+            out_ref[...] = jnp.max(xg, axis=0)
+        elif op == "min":
+            out_ref[...] = jnp.min(xg, axis=0)
+        elif op == "or":
+            r = xg[0]
+            for i in range(1, xg.shape[0]):
+                r = jnp.bitwise_or(r, xg[i])
+            out_ref[...] = r
+        else:
+            raise ValueError(op)
+
+    @pl.when(jnp.logical_not(any_dirty))
+    def _clean():
+        # every replica's block is clean zero-state: copy, skip the reduce
+        out_ref[...] = stack_ref[0]
+
+
+def gated_delta_merge_pallas(
+    wid_stack: jax.Array,  # i32[R, W]
+    stack: jax.Array,  # [R, W, F] (trailing dims flattened by ops.py)
+    op: str = "max",
+    tile_w: int = 8,
+    tile_f: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    R, W, F = stack.shape
+    assert wid_stack.shape == (R, W), (wid_stack.shape, stack.shape)
+    assert W % tile_w == 0 and F % tile_f == 0, (W, F, tile_w, tile_f)
+    grid = (W // tile_w, F // tile_f)
+    return pl.pallas_call(
+        functools.partial(_gated_kernel, op=op),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((R, tile_w), lambda i, j: (0, i)),
+            pl.BlockSpec((R, tile_w, tile_f), lambda i, j: (0, i, j)),
+        ],
+        out_specs=pl.BlockSpec((tile_w, tile_f), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((W, F), stack.dtype),
+        interpret=interpret,
+    )(wid_stack, stack)

@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
-from repro.kernels.crdt_merge import crdt_merge_pallas
+from repro.kernels.crdt_merge import crdt_merge_pallas, gated_delta_merge_pallas
 from repro.kernels.topk_window import topk_window_pallas
 from repro.kernels.window_agg import window_agg_pallas
 
@@ -62,6 +62,37 @@ def crdt_merge(stack, op: str = "max", use_pallas: bool | None = None, interpret
         flat = jnp.pad(flat, ((0, 0), (0, pad)), constant_values=fill)
     out = crdt_merge_pallas(flat, op=op, tile_f=tile, interpret=interpret)
     return out[:F].reshape(trailing)
+
+
+@partial(jax.jit, static_argnames=("op", "use_pallas", "interpret"))
+def gated_delta_merge(
+    wid_stack, leaf_stack, op: str = "max", use_pallas: bool | None = None,
+    interpret: bool = False,
+):
+    """Slot-aware join of [R]-stacked delta replicas (delta-state sync).
+
+    ``wid_stack`` i32[R, W] carries each replica's ring tenant wids (-1 for
+    clean slots); ``leaf_stack`` [R, W, ...] the matching window leaf.  Per
+    slot only newest-tenant replicas contribute; all-clean tiles are copied,
+    not reduced (the Pallas kernel's skip path).
+    """
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if not use:
+        return _ref.gated_delta_merge_ref(wid_stack, leaf_stack, op=op)
+    R, W = wid_stack.shape
+    trailing = leaf_stack.shape[2:]
+    flat = leaf_stack.reshape(R, W, -1)
+    F = flat.shape[2]
+    tile_w = 8 if W % 8 == 0 else 1
+    tile_f = 128
+    pad_f = (-F) % tile_f
+    if pad_f:
+        # pad lanes join to garbage that is sliced away; 0 keeps math finite
+        flat = jnp.pad(flat, ((0, 0), (0, 0), (0, pad_f)))
+    out = gated_delta_merge_pallas(
+        wid_stack, flat, op=op, tile_w=tile_w, tile_f=tile_f, interpret=interpret
+    )
+    return out[:, :F].reshape(W, *trailing)
 
 
 @partial(jax.jit, static_argnames=("use_pallas", "interpret"))

@@ -62,6 +62,43 @@ def crdt_merge_ref(stack: jax.Array, op: str = "max") -> jax.Array:
     raise ValueError(op)
 
 
+def gated_neutral(op: str, dtype) -> jnp.ndarray:
+    """Join identity for a gated-out replica contribution."""
+    if op == "or":
+        return jnp.zeros((), dtype=dtype)
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.array(-jnp.inf if op == "max" else jnp.inf, dtype=dtype)
+    info = jnp.iinfo(dtype)
+    return jnp.array(info.min if op == "max" else info.max, dtype=dtype)
+
+
+def gated_delta_merge_ref(
+    wid_stack: jax.Array,  # i32[R, W] per-replica ring tenant wids (-1 clean)
+    leaf_stack: jax.Array,  # [R, W, ...] matching window-leaf stack
+    op: str = "max",
+) -> jax.Array:
+    """Slot-aware join of R delta replicas: per slot, only replicas holding
+    the newest tenant window contribute; stale/clean replicas (including
+    ``slot_wid == -1``) are gated to the join identity.  All-clean slots
+    (every wid -1) pass replica 0 through — deltas carry the deterministic
+    zero-state there, identical on every replica.
+    """
+    out_wid = jnp.max(wid_stack, axis=0)  # [W]
+    gate = wid_stack == out_wid[None, :]  # [R, W]
+    extra = (1,) * (leaf_stack.ndim - 2)
+    g = gate.reshape(*gate.shape, *extra)
+    x = jnp.where(g, leaf_stack, gated_neutral(op, leaf_stack.dtype))
+    if op == "max":
+        return jnp.max(x, axis=0)
+    if op == "min":
+        return jnp.min(x, axis=0)
+    if op == "or":
+        if leaf_stack.dtype == jnp.bool_:
+            return jnp.any(x, axis=0)
+        return jnp.bitwise_or.reduce(x, axis=0)
+    raise ValueError(op)
+
+
 def topk_window_ref(
     state_vals: jax.Array,  # f32[W, k] desc-sorted, -inf padded
     state_ids: jax.Array,  # u32[W, k]

@@ -122,6 +122,16 @@ def _trip_count(cond: Block) -> int:
     return max(consts) if consts else 1
 
 
+def _split_operands(argstr: str) -> list[str]:
+    """Operand names from an HLO operand list.  Dumps print either typed
+    operands ("f32[8,16]{1,0} %x" — commas inside the dims, names carry %)
+    or bare names ("x, y"); handle both."""
+    names = re.findall(r"%([\w.\-]+)", argstr)
+    if names:
+        return names
+    return [a.strip() for a in argstr.split(",") if a.strip()]
+
+
 def _dot_flops(ins: Instr, blk: Block) -> float:
     m = _CONTRACT.search(ins.line)
     if not m:
@@ -132,7 +142,7 @@ def _dot_flops(ins: Instr, blk: Block) -> float:
     try:
         args = ins.line.split(ins.opcode + "(", 1)[1]
         args = args.split(")", 1)[0]
-        first = args.split(",")[0].strip().lstrip("%")
+        first = _split_operands(args)[0]
     except Exception:
         return 0.0
     lhs = blk.shapes.get(first)
@@ -203,7 +213,7 @@ def analyze(text: str) -> dict:
         args = ins.line.split(ins.opcode + "(", 1)
         if len(args) < 2:
             return []
-        return [a.strip().lstrip("%") for a in args[1].split(")", 1)[0].split(",") if a.strip()]
+        return _split_operands(args[1].split(")", 1)[0])
 
     def _shape_bytes(blk: Block, name: str) -> int:
         sh = blk.shapes.get(name)

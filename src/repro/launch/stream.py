@@ -7,6 +7,16 @@ harness in repro/runtime measures coordination behaviour; this driver is the
 dataplane that would actually run on a pod, and what bench_throughput
 measures for raw events/s.
 
+Background sync is delta-state by default (DESIGN.md §6): each device carries
+the shared post-last-sync baseline ``(folded, progress)``, extracts only the
+ring slots its folds dirtied since then (``W.delta_since``), and the deltas
+are exchanged and joined by the dirty-slot-gated merge kernel — slots with
+``slot_wid < 0`` are skipped, not reduced.  The per-round shipped bytes
+(``W.delta_nbytes``, what a real gossip transport would put on the wire
+instead of the whole ring) come back as a pipeline output so the win is
+measured, not asserted.  ``--full-sync`` restores the full-state lattice
+all-reduce for comparison.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.stream --query q7 --batches 64
   (optionally XLA_FLAGS=--xla_force_host_platform_device_count=8 for a
@@ -22,6 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.core import wcrdt as W
 from repro.streaming.events import EventBatch
 from repro.streaming.generator import NexmarkConfig, generate_log
@@ -30,11 +41,13 @@ from repro.streaming.queries import Query, make_q1_ratio, make_q4, make_q7
 MAKERS = {"q4": make_q4, "q7": make_q7, "q1_ratio": make_q1_ratio}
 
 
-def build_pipeline(query: Query, mesh, sync_every: int):
-    """Returns a jitted fn: (log slice per device) -> per-window outputs.
+def build_pipeline(query: Query, mesh, sync_every: int, delta_sync: bool = True):
+    """Returns a jitted fn: (log slice per device) -> (oks, vals, sync_bytes).
 
-    Scans batches; every ``sync_every`` folds runs one lattice all-reduce
-    (the background sync); finally reads every completed window.
+    Scans batches; every ``sync_every`` folds runs one background-sync
+    exchange (delta-state by default, full-state all-reduce with
+    ``delta_sync=False``); finally reads every completed window.
+    ``sync_bytes`` is each device's total modeled sync traffic in bytes.
     """
 
     n_windows = 64
@@ -42,24 +55,35 @@ def build_pipeline(query: Query, mesh, sync_every: int):
     def node_fn(log: EventBatch):
         p = jax.lax.axis_index("data")
         # mark replica state device-varying from the start (shard_map vma)
-        vary = lambda t: jax.tree.map(lambda x: jax.lax.pvary(x, ("data",)), t)
+        vary = lambda t: jax.tree.map(lambda x: compat.pvary(x, ("data",)), t)
         shared = vary(query.init_shared())
         local = vary(query.init_local())
+        baselines = tuple(W.baseline_of(st) for st in shared)
+        sync_bytes = compat.pvary(jnp.float32(0.0), ("data",))
 
         def fold_one(carry, batch):
-            shared, local = carry
-            shared, local = query.fold(shared, local, batch, p)
-            return (shared, local), None
+            # batch_idx advances the folded frontier — what delta_since diffs
+            shared, local, idx = carry
+            shared, local = query.fold(shared, local, batch, p, batch_idx=idx)
+            return (shared, local, idx + 1), None
 
         def sync_chunk(carry, chunk):
-            # sync_every folds, then one background-sync collective
-            carry, _ = jax.lax.scan(fold_one, carry, chunk)
-            shared, local = carry
-            shared = tuple(
-                W.axis_join(spec, st, "data")
-                for spec, st in zip(query.shared_specs, shared)
+            # sync_every folds, then one background-sync exchange
+            shared, local, idx, baselines, sync_bytes = carry
+            (shared, local, idx), _ = jax.lax.scan(
+                fold_one, (shared, local, idx), chunk
             )
-            return (shared, local), None
+            synced, new_base = [], []
+            for spec, st, (bf, bp) in zip(query.shared_specs, shared, baselines):
+                if delta_sync:
+                    st, shipped = W.delta_axis_join(spec, st, bf, bp, "data")
+                else:
+                    st = W.axis_join(spec, st, "data")
+                    shipped = jnp.float32(W.state_nbytes(st))
+                sync_bytes = sync_bytes + shipped
+                synced.append(st)
+                new_base.append(W.baseline_of(st))
+            return (tuple(synced), local, idx, tuple(new_base), sync_bytes), None
 
         log0 = jax.tree.map(lambda x: x[0], log)  # strip device-local lead dim
         nb = jax.tree.leaves(log0)[0].shape[0]
@@ -70,22 +94,25 @@ def build_pipeline(query: Query, mesh, sync_every: int):
             ),
             log0,
         )
-        (shared, local), _ = jax.lax.scan(sync_chunk, (shared, local), chunked)
+        idx0 = compat.pvary(jnp.int32(0), ("data",))
+        (shared, local, _, _, sync_bytes), _ = jax.lax.scan(
+            sync_chunk, (shared, local, idx0, baselines, sync_bytes), chunked
+        )
 
         def read(w):
             v, ok = query.read(shared, local, w)
             return jnp.where(ok, 1.0, 0.0), v
 
         oks, vals = jax.vmap(read)(jnp.arange(n_windows))
-        return oks[None], vals[None]
+        return oks[None], vals[None], sync_bytes[None]
 
     log_specs = jax.tree.map(lambda _: P("data"), EventBatch(*([0] * 7)))
     return jax.jit(
-        jax.shard_map(
+        compat.shard_map(
             node_fn,
             mesh=mesh,
             in_specs=(log_specs,),
-            out_specs=(P("data"), P("data")),
+            out_specs=(P("data"), P("data"), P("data")),
         )
     )
 
@@ -97,10 +124,14 @@ def main(argv=None):
     ap.add_argument("--events-per-batch", type=int, default=1024)
     ap.add_argument("--window-len", type=int, default=1000)
     ap.add_argument("--sync-every", type=int, default=4)
+    ap.add_argument("--full-sync", action="store_true",
+                    help="full-state lattice all-reduce instead of delta sync")
     args = ap.parse_args(argv)
+    if not 1 <= args.sync_every <= args.batches:
+        ap.error(f"--sync-every must be in [1, --batches]; got {args.sync_every}")
 
     n_dev = len(jax.devices())
-    mesh = jax.make_mesh((n_dev,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((n_dev,), ("data",))
     nx = NexmarkConfig(
         num_partitions=n_dev,
         num_batches=args.batches,
@@ -110,19 +141,24 @@ def main(argv=None):
     query = MAKERS[args.query](n_dev, window_len=args.window_len, num_slots=64)
 
     with mesh:
-        pipe = build_pipeline(query, mesh, args.sync_every)
-        oks, vals = pipe(log)  # compile+run
+        pipe = build_pipeline(query, mesh, args.sync_every,
+                              delta_sync=not args.full_sync)
+        oks, vals, sb = pipe(log)  # compile+run
         jax.block_until_ready(oks)
         t0 = time.time()
-        oks, vals = pipe(log)
+        oks, vals, sb = pipe(log)
         jax.block_until_ready(oks)
         dt = time.time() - t0
 
     total_events = n_dev * args.batches * args.events_per_batch
     done = int(np.asarray(oks).sum()) // n_dev
+    rounds = max(args.batches // args.sync_every, 1)
+    sync_per_round = float(np.asarray(sb).mean()) / rounds
     print(
         f"devices={n_dev} events={total_events} wall={dt*1e3:.1f}ms "
-        f"throughput={total_events/dt/1e6:.2f}M ev/s complete_windows={done}"
+        f"throughput={total_events/dt/1e6:.2f}M ev/s complete_windows={done} "
+        f"sync={'full' if args.full_sync else 'delta'} "
+        f"sync_bytes_per_round={sync_per_round:.0f}"
     )
     return total_events / dt
 

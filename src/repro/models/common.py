@@ -23,9 +23,11 @@ from jax.sharding import PartitionSpec as P
 
 
 def _cur_mesh():
-    m = jax.sharding.get_abstract_mesh()
-    if m is not None and not m.empty:
-        return m
+    get_abstract_mesh = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get_abstract_mesh is not None:  # jax >= 0.5; older falls through to legacy
+        m = get_abstract_mesh()
+        if m is not None and not m.empty:
+            return m
     try:  # legacy `with mesh:` context (what launch/dryrun.py uses)
         from jax._src import mesh as mesh_lib
 

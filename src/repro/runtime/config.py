@@ -26,6 +26,7 @@ class SimConfig:
     poll_idle_ms: float = 2.0  # executor re-poll when no batch available
 
     # --- Holon decentralized coordination (paper §4) ---
+    delta_sync: bool = True  # ship delta_since(peer baseline), not replicas
     sync_interval_ms: float = 100.0  # background CRDT broadcast period
     broadcast_delay_ms: float = 5.0  # one-way broadcast-stream latency
     hb_interval_ms: float = 250.0  # decentralized liveness beacon

@@ -31,6 +31,12 @@ class Consumer:
         self.records: dict[tuple[int, int], WindowRecord] = {}
         self.events_consumed: list[tuple[float, int]] = []  # (time, count)
         self.duplicates = 0
+        # sync-bandwidth probe, filled by the runtime at end of run:
+        # bytes actually shipped (delta or full) vs the full-state cost
+        self.sync_msgs = 0
+        self.sync_nacks = 0
+        self.sync_bytes = 0.0
+        self.sync_bytes_full = 0.0
 
     # -- output path --------------------------------------------------------
     def emit(self, t: float, partition: int, window: int, value) -> bool:

@@ -7,8 +7,15 @@ Every node runs four independent loops (no global coordination anywhere):
                batch; fold it into the node replica (real JAX dataplane);
                emit every newly-completed window (gated by the global
                watermark, so emissions are deterministic and idempotent).
-  sync       : every ``sync_interval`` publish the node replica on the
-               broadcast stream; peers lattice-join it on delivery.
+  sync       : every ``sync_interval`` publish a per-peer *delta*
+               (``delta_since`` the peer's acked baseline) on the broadcast
+               stream; peers lattice-join it on delivery.  A peer applies a
+               delta only when its replica dominates the delta's baseline
+               (the causal delta-merging condition) and acks the sender's
+               marker; otherwise it nacks, the sender drops the baseline,
+               and the next round ships the full resident state.  With
+               ``cfg.delta_sync=False`` the loop broadcasts whole replicas
+               (the paper's original protocol, kept for comparison).
   checkpoint : every ``ckpt_interval`` put each owned partition's
                (nxt_idx, nxt_odx, emitted_upto, replica, local) to storage —
                unsynchronized, local decision ("sometimes do").
@@ -66,6 +73,9 @@ class HolonNode:
         self.last_hb: dict[int, float] = {}
         self._rr = 0  # round-robin cursor over owned partitions
         self.generation = 0  # bumped on restart; stale callbacks check it
+        # delta sync: per-peer acked (folded, progress) baseline per shared
+        # spec — what the peer is known to hold; absent = ship full state
+        self.peer_baseline: dict[int, tuple] = {}
 
     # ---- lifecycle ---------------------------------------------------------
     def boot(self, initial_pids: list[int]):
@@ -92,6 +102,7 @@ class HolonNode:
         self.replica = self.h.query.init_shared()
         self.last_hb = {}
         self._rr = 0
+        self.peer_baseline = {}
         self.boot([])
         # control loop will steal this node's assigned partitions
 
@@ -196,21 +207,74 @@ class HolonNode:
             return
         if self.h.query.shared_specs:
             snap = self.replica
+            marker = self.h.marker_of(snap)
             for other in self.h.nodes:
-                if other.nid != self.nid:
-                    self.h.sim.after(
-                        self.h.cfg.broadcast_delay_ms,
-                        lambda o=other, s=snap: o._on_sync(s),
-                    )
+                if other.nid == self.nid:
+                    continue
+                if self.h.cfg.delta_sync:
+                    base = self.peer_baseline.get(other.nid, self.h.zero_base)
+                    payload = self.h.delta_fn(snap, base)
+                    shipped = self.h.delta_bytes(payload)
+                else:
+                    base, payload, shipped = None, snap, self.h.full_state_bytes
+                self.h.sync_msgs += 1
+                self.h.sync_bytes += shipped
+                self.h.sync_bytes_full += self.h.full_state_bytes
+                self.h.sim.after(
+                    self.h.cfg.broadcast_delay_ms,
+                    lambda o=other, pay=payload, b=base, mk=marker: o._on_sync(
+                        pay, self.nid, b, mk
+                    ),
+                )
         self.h.sim.after(self.h.cfg.sync_interval_ms, lambda: self._loop_sync(gen))
 
-    def _on_sync(self, snap):
+    def _on_sync(self, snap, src: int | None = None, base=None, marker=None):
         if not self.alive:
+            return
+        if base is not None and not self._dominates(base):
+            # our replica (e.g. freshly recovered from an older checkpoint)
+            # does not cover the delta's baseline — applying it would lose
+            # the gap.  Nack so the sender resets to a full-state round.
+            self.h.sync_nacks += 1
+            if src is not None:
+                self.h.sim.after(
+                    self.h.cfg.broadcast_delay_ms,
+                    lambda s=src: self.h.nodes[s]._on_sync_nack(self.nid),
+                )
             return
         self.replica = self.h.merge_fn(self.replica, snap)
         # merged watermark may complete windows for our partitions
         for pid in self.owned:
             self._emit_ready(pid)
+        if marker is not None and src is not None:
+            self.h.sim.after(
+                self.h.cfg.broadcast_delay_ms,
+                lambda s=src, mk=marker: self.h.nodes[s]._on_sync_ack(self.nid, mk),
+            )
+
+    def _dominates(self, base) -> bool:
+        """Causal delta-merging condition: do we already hold everything the
+        sender assumed (per-spec folded & progress at or past the baseline)?"""
+        for st, (bf, bp) in zip(self.replica, base):
+            if np.any(np.asarray(st.folded) < bf) or np.any(np.asarray(st.progress) < bp):
+                return False
+        return True
+
+    def _on_sync_ack(self, peer: int, marker):
+        if not self.alive:
+            return
+        cur = self.peer_baseline.get(peer)
+        if cur is None:
+            self.peer_baseline[peer] = marker
+        else:  # acks may arrive out of order; the baseline only grows
+            self.peer_baseline[peer] = tuple(
+                (np.maximum(cf, mf), np.maximum(cp, mp))
+                for (cf, cp), (mf, mp) in zip(cur, marker)
+            )
+
+    def _on_sync_nack(self, peer: int):
+        if self.alive:
+            self.peer_baseline.pop(peer, None)
 
     def _loop_control(self, gen: int):
         if not self.alive or gen != self.generation:
@@ -248,6 +312,10 @@ class HolonNode:
                 emitted_upto=m.emitted_upto,
                 shared=self.replica,
                 local=self.locals[pid],
+                # coverage marker of the shared snapshot: recovery knows
+                # exactly which deltas the checkpoint subsumes, and peers'
+                # domination checks replay deterministically from it
+                baseline=self.h.marker_of(self.replica),
             )
             # async durable write completes after one storage RTT
             self.h.sim.after(
@@ -277,7 +345,34 @@ class HolonHarness:
         self.fold_fn = jax.jit(query.fold)
         self.merge_fn = jax.jit(query.merge_shared)
         self.read_fn = jax.jit(query.read)
+        # delta-sync dataplane + sync-bandwidth accounting
+        specs = query.shared_specs
+        self.delta_fn = jax.jit(
+            lambda snap, base: tuple(
+                W.delta_since(spec, st, bf, bp)
+                for spec, st, (bf, bp) in zip(specs, snap, base)
+            )
+        )
+        self.zero_base = tuple(W.zero_baseline(spec) for spec in specs)
+        self.full_state_bytes = float(
+            sum(W.state_nbytes(st) for st in query.init_shared())
+        )
+        self.sync_msgs = 0
+        self.sync_nacks = 0
+        self.sync_bytes = 0.0  # bytes actually shipped (delta or full)
+        self.sync_bytes_full = 0.0  # what full-state sync would have shipped
         self.nodes = [HolonNode(n, self) for n in range(cfg.num_nodes)]
+
+    @staticmethod
+    def marker_of(snap) -> tuple:
+        """Host-side (folded, progress) coverage marker of a replica tuple."""
+        return tuple(
+            (np.asarray(st.folded), np.asarray(st.progress)) for st in snap
+        )
+
+    @staticmethod
+    def delta_bytes(deltas) -> float:
+        return float(sum(float(W.delta_nbytes(d)) for d in deltas))
 
     def batch(self, pid: int, idx: int) -> EventBatch:
         return jax.tree.map(lambda x: x[pid, idx], self.log)
@@ -295,6 +390,11 @@ class HolonHarness:
                 self.sim.at(rt, lambda n=nid: self.nodes[n].restart())
         horizon = horizon_ms if horizon_ms is not None else self.cfg.horizon_ms + 5000.0
         self.sim.run(until=horizon)
+        # expose sync-bandwidth counters on the consumer (benchmark probe)
+        self.consumer.sync_msgs = self.sync_msgs
+        self.consumer.sync_nacks = self.sync_nacks
+        self.consumer.sync_bytes = self.sync_bytes
+        self.consumer.sync_bytes_full = self.sync_bytes_full
         return self.consumer
 
 

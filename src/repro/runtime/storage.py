@@ -18,6 +18,19 @@ class PartitionCheckpoint:
     emitted_upto: int  # first window id not yet emitted
     shared: Any  # tuple[WState, ...] replica snapshot
     local: Any  # WLocal state (or None)
+    # delta-sync coverage marker: per shared spec the (folded, progress) the
+    # snapshot covers.  Recovery restarts delta replay from exactly here —
+    # a peer whose delta baseline exceeds it gets nacked into a full resync.
+    # Host-side numpy (derivable from ``shared``, but kept materialized so
+    # storage can compare coverage without touching device arrays).
+    baseline: Any = None
+
+
+def _coverage(ckpt: PartitionCheckpoint) -> float:
+    """Total gossip coverage of a checkpoint (sum of folded frontiers)."""
+    if ckpt.baseline is None:
+        return 0.0
+    return float(sum(folded.sum() for folded, _ in ckpt.baseline))
 
 
 class CheckpointStorage:
@@ -29,8 +42,14 @@ class CheckpointStorage:
     def put(self, pid: int, ckpt: PartitionCheckpoint) -> None:
         self.puts += 1
         cur = self._data.get(pid)
-        # Algorithm 2: lattice merge keeps the state with the largest nxtIdx.
-        if cur is None or ckpt.nxt_idx >= cur.nxt_idx:
+        # Algorithm 2: lattice merge keeps the state with the largest nxtIdx;
+        # ties broken by delta-sync coverage (richer gossip wins, so recovery
+        # replays the fewest deltas).
+        if (
+            cur is None
+            or ckpt.nxt_idx > cur.nxt_idx
+            or (ckpt.nxt_idx == cur.nxt_idx and _coverage(ckpt) >= _coverage(cur))
+        ):
             self._data[pid] = ckpt
 
     def get(self, pid: int) -> PartitionCheckpoint | None:

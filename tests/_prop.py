@@ -1,0 +1,118 @@
+"""Property-test shim: real hypothesis when installed, else a tiny seeded
+fallback so tier-1 collects and passes on a bare interpreter.
+
+The fallback implements exactly the subset these tests use:
+
+* ``given(**strategies)`` — runs the test body for ``max_examples`` draws,
+  each from a ``random.Random`` seeded by the test's qualified name (stable
+  across runs and machines, so failures reproduce).
+* ``settings.register_profile / load_profile`` with ``max_examples``.
+* ``st.integers / floats / lists / tuples / booleans / sampled_from``.
+
+No shrinking, no database — a failing draw reports its kwargs and the shim's
+seed; install hypothesis for the full experience.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+    import random
+    import zlib
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng: random.Random):
+            return self._draw(rng)
+
+    class _St:
+        @staticmethod
+        def integers(min_value=0, max_value=1 << 31):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, allow_nan=False, width=64,
+                   allow_infinity=False):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda rng: rng.choice(elements))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=8):
+            def draw(rng):
+                n = rng.randint(min_size, max_size)
+                return [elements.example(rng) for _ in range(n)]
+
+            return _Strategy(draw)
+
+        @staticmethod
+        def tuples(*strategies):
+            return _Strategy(lambda rng: tuple(s.example(rng) for s in strategies))
+
+    st = _St()
+
+    class settings:  # noqa: N801 — mirrors hypothesis' name
+        _profiles: dict = {"default": {"max_examples": 20}}
+        _current = "default"
+
+        def __init__(self, **kw):
+            self.kw = kw
+
+        @classmethod
+        def register_profile(cls, name, **kw):
+            cls._profiles[name] = kw
+
+        @classmethod
+        def load_profile(cls, name):
+            cls._current = name
+
+        @classmethod
+        def _max_examples(cls):
+            return cls._profiles.get(cls._current, {}).get("max_examples", 20)
+
+    def given(**strategy_kwargs):
+        def decorate(func):
+            # snapshot the module's own profile at decoration time — several
+            # test modules register/load a profile right before their @given
+            # tests, and the registry is global (last import wins otherwise)
+            max_examples = settings._max_examples()
+
+            @functools.wraps(func)
+            def wrapper(*args, **kwargs):
+                seed0 = zlib.crc32(func.__qualname__.encode())
+                for i in range(max_examples):
+                    rng = random.Random(seed0 + i)
+                    draws = {k: s.example(rng) for k, s in strategy_kwargs.items()}
+                    try:
+                        func(*args, **draws, **kwargs)
+                    except Exception as e:  # annotate for reproduction
+                        raise AssertionError(
+                            f"falsifying example (shim seed {seed0 + i}): {draws!r}"
+                        ) from e
+
+            # hide the drawn params from pytest's fixture resolution
+            sig = inspect.signature(func)
+            wrapper.__signature__ = sig.replace(
+                parameters=[
+                    p for p in sig.parameters.values()
+                    if p.name not in strategy_kwargs
+                ]
+            )
+            return wrapper
+
+        return decorate

@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st
 
 from repro.core import (
     GCounter,
@@ -21,8 +21,8 @@ from repro.core import (
     join_many,
 )
 
-settings.register_profile("ci", max_examples=40, deadline=None)
-settings.load_profile("ci")
+settings.register_profile("ci-laws", max_examples=40, deadline=None)
+settings.load_profile("ci-laws")
 
 N_ACTORS = 4
 

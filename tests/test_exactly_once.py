@@ -6,13 +6,13 @@ keeps making progress as long as one node survives.
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st
 
 from repro.runtime import FailureScenario, SimConfig, run_flink, run_holon
 from repro.streaming import generate_log, make_q1_ratio, make_q4, make_q7, NexmarkConfig
 
-settings.register_profile("ci", max_examples=5, deadline=None)
-settings.load_profile("ci")
+settings.register_profile("ci-e2e", max_examples=5, deadline=None)
+settings.load_profile("ci-e2e")
 
 SMALL = SimConfig(
     num_nodes=3,

@@ -88,6 +88,82 @@ def test_topk_window(W, k, B):
     np.testing.assert_array_equal(np.asarray(gi)[finite], np.asarray(wi)[finite])
 
 
+@pytest.mark.parametrize("R,W,F", [(2, 8, 128), (4, 16, 200), (8, 64, 96)])
+@pytest.mark.parametrize("op,dtype", [("max", np.float32), ("min", np.float32), ("max", np.int32), ("or", np.uint8)])
+def test_gated_delta_merge(R, W, F, op, dtype):
+    """Pallas gated delta-merge vs the reference on random dirty masks."""
+    from repro.kernels.ops import gated_delta_merge
+
+    rng = np.random.default_rng(R * W + F + len(op))
+    wid = rng.integers(-1, 5, size=(R, W)).astype(np.int32)
+    if op == "or":
+        leaf = rng.integers(0, 2, size=(R, W, F)).astype(dtype)
+    else:
+        leaf = (rng.standard_normal((R, W, F)) * 50).astype(dtype)
+    # clean slots must carry the deterministic zero-state: zero them
+    leaf = np.where((wid < 0)[..., None], np.zeros_like(leaf), leaf)
+    got = gated_delta_merge(jnp.array(wid), jnp.array(leaf), op=op,
+                            use_pallas=True, interpret=True)
+    want = ref.gated_delta_merge_ref(jnp.array(wid), jnp.array(leaf), op=op)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("case", ["all_clean", "all_dirty", "one_dirty_row"])
+def test_gated_delta_merge_edges(case):
+    """Empty-slot edge cases: slot_wid == -1 everywhere (skip path), every
+    slot dirty, and a single dirty replica per slot."""
+    from repro.kernels.ops import gated_delta_merge
+
+    rng = np.random.default_rng(7)
+    R, W, F = 4, 16, 160
+    if case == "all_clean":
+        wid = np.full((R, W), -1, np.int32)
+        leaf = np.zeros((R, W, F), np.float32)
+    elif case == "all_dirty":
+        wid = rng.integers(0, 3, size=(R, W)).astype(np.int32)
+        leaf = rng.standard_normal((R, W, F)).astype(np.float32)
+    else:  # exactly one replica owns each slot, the rest are clean
+        wid = np.full((R, W), -1, np.int32)
+        owner = rng.integers(0, R, size=W)
+        wid[owner, np.arange(W)] = rng.integers(0, 9, size=W)
+        leaf = rng.standard_normal((R, W, F)).astype(np.float32)
+        leaf = np.where((wid < 0)[..., None], np.zeros_like(leaf), leaf)
+    got = gated_delta_merge(jnp.array(wid), jnp.array(leaf), op="max",
+                            use_pallas=True, interpret=True)
+    want = ref.gated_delta_merge_ref(jnp.array(wid), jnp.array(leaf), op="max")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    if case == "all_clean":
+        np.testing.assert_array_equal(np.asarray(got), np.zeros((W, F), np.float32))
+    if case == "one_dirty_row":
+        # the winner's content passes through untouched
+        np.testing.assert_array_equal(
+            np.asarray(got), leaf[owner, np.arange(W)]
+        )
+
+
+def test_gated_delta_merge_matches_pairwise_wstate_merge():
+    """The stacked gated merge equals the slot-aware pairwise WState join."""
+    from repro.core import wcrdt as W_
+    from repro.core import wgcounter
+
+    spec = wgcounter(window_len=10, num_slots=16, num_partitions=3)
+    states = []
+    for p in range(3):
+        s = spec.zero()
+        ts = jnp.array([p * 7 + 1, p * 7 + 12, p * 7 + 30], jnp.int32)
+        s = W_.insert(spec, s, p, ts, jnp.ones(3, bool), batch_idx=0,
+                      actor=p, amounts=jnp.ones(3))
+        s = W_.increment_watermark(spec, s, p, int(ts.max()))
+        states.append(W_.delta_since(spec, s, *W_.zero_baseline(spec)))
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+    got = W_.merge_delta_stack(spec, stacked)
+    want = states[0]
+    for s in states[1:]:
+        want = W_.merge(spec, want, s)
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 def test_ops_dispatch_cpu_fallback():
     """On CPU the public ops use the reference path (dry-run stays pure XLA)."""
     from repro.kernels.ops import crdt_merge, topk_window, window_agg

@@ -7,13 +7,13 @@ or duplicated deliveries.  Incomplete windows read as not-ok (None).
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st
 
 from repro.core import wcrdt as W
 from repro.core import wgcounter, wmaxreg, wtopk
 
-settings.register_profile("ci", max_examples=30, deadline=None)
-settings.load_profile("ci")
+settings.register_profile("ci-wcrdt", max_examples=30, deadline=None)
+settings.load_profile("ci-wcrdt")
 
 P = 3  # partitions
 WL = 10  # window length
