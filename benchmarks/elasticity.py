@@ -1,0 +1,133 @@
+"""Elastic reconfiguration: watermark-latency during 4→8→4 node transitions.
+
+Runs Q7 under a zipf-skewed load hot enough that 4 nodes sit near saturation,
+then compares two ways of changing the cluster size mid-run:
+
+  elastic : the Holon way (docs/protocol.md §3) — scale_out adds nodes that
+            bootstrap from a live peer while everyone keeps processing;
+            scale_in drains nodes with a final delta flush + handoff
+            checkpoints.  No global pause anywhere.
+  stw     : a stop-the-world rebalance baseline — every node is quiesced at
+            the transition, state is redistributed through storage, and the
+            new membership restarts ``stw_pause_ms`` later (the
+            checkpoint-restore rebalance that centralized runtimes do).
+
+Reported per run: avg/p99 latency, the max latency spike inside a window
+around each transition, and the settle time back to pre-transition latency.
+The elastic run's deduplicated outputs are also checked byte-identical to a
+fixed-membership oracle — scale events must not violate exactly-once.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from benchmarks.common import emit, timer
+from repro.runtime import Scenario, SimConfig, run_holon
+from repro.streaming import make_q7
+
+BASE_NODES = (0, 1, 2, 3)
+NEW_NODES = (4, 5, 6, 7)
+STW_PAUSE_MS = 1500.0  # quiesce + redistribute + resume for the baseline
+SPIKE_WIN_MS = 5000.0  # window around a transition scanned for the spike
+
+
+def _cfg(quick: bool) -> SimConfig:
+    # 16 skewed partitions on 4 nodes at ~90% utilization: batch span is
+    # 51.2 ms and a mean-load partition costs ~11.5 ms/batch, so 4-ish
+    # partitions/node saturate a node — scale-out visibly relieves latency.
+    return SimConfig(
+        num_nodes=len(BASE_NODES),
+        num_partitions=16,
+        num_batches=120 if quick else 240,
+        events_per_batch=512,
+        window_len=500,
+        num_slots=64,
+        batch_proc_ms=20.0,
+        skew=0.5,
+        sync_interval_ms=50.0,
+        ckpt_interval_ms=500.0,
+    )
+
+
+def spike_stats(consumer, t0: float, win_ms: float, base_avg: float):
+    """(max latency, settle time) inside [t0, t0+win_ms): settle = time from
+    the transition until window latencies return below 3x the quiet avg."""
+    t, lat = consumer.latency_series()
+    m = (t >= t0) & (t < t0 + win_ms)
+    if not m.any():
+        return 0.0, 0.0
+    peak = float(lat[m].max())
+    bad = m & (lat > 3.0 * max(base_avg, 1.0))
+    settle = float(t[bad].max() - t0) if bad.any() else 0.0
+    return peak, settle
+
+
+def main(quick: bool = False):
+    cfg = _cfg(quick)
+    q = make_q7(cfg.num_partitions, window_len=cfg.window_len, num_slots=cfg.num_slots)
+    horizon = cfg.horizon_ms
+    t_out, t_in = horizon * 0.33, horizon * 0.66
+
+    scenarios = {
+        "fixed4": Scenario("fixed4"),
+        "elastic": Scenario("elastic")
+        .scale_out(t_out, *NEW_NODES)
+        .scale_in(t_in, *NEW_NODES),
+        # stop-the-world: at each transition every running node crashes and
+        # the post-transition membership restarts after the rebalance pause
+        "stw": Scenario("stw")
+        .crash(t_out, *BASE_NODES)
+        .restart(t_out + STW_PAUSE_MS, *BASE_NODES)
+        .scale_out(t_out + STW_PAUSE_MS, *NEW_NODES)
+        .crash(t_in, *BASE_NODES, *NEW_NODES)
+        .restart(t_in + STW_PAUSE_MS, *BASE_NODES)
+        # decommission the crashed extra nodes so publishers stop paying
+        # per-peer cost for them (docs/protocol.md §3.3)
+        .scale_in(t_in + STW_PAUSE_MS, *NEW_NODES),
+    }
+
+    results = {}
+    for name, scen in scenarios.items():
+        with timer() as tm:
+            c = run_holon(cfg, q, scen, horizon_ms=horizon + 15_000)
+        results[name] = c
+        s = c.latency_stats()
+        base_avg = results["fixed4"].latency_stats()["avg"]
+        pk_out, st_out = spike_stats(c, t_out, SPIKE_WIN_MS, base_avg)
+        pk_in, st_in = spike_stats(c, t_in, SPIKE_WIN_MS, base_avg)
+        emit(
+            f"elasticity/{name}",
+            tm.dt * 1e6,
+            f"avg_ms={s['avg']:.0f};p99_ms={s['p99']:.0f};n={s['n']};"
+            f"out_peak_ms={pk_out:.0f};out_settle_ms={st_out:.0f};"
+            f"in_peak_ms={pk_in:.0f};in_settle_ms={st_in:.0f}",
+        )
+
+    # exactly-once across elasticity: the elastic run's deduplicated outputs
+    # must be byte-identical to the fixed-membership oracle
+    oracle = {k: np.asarray(r.value) for k, r in results["fixed4"].records.items()}
+    got = {k: np.asarray(r.value) for k, r in results["elastic"].records.items()}
+    missing = set(oracle) - set(got)
+    extra = set(got) - set(oracle)  # spurious windows the oracle never emitted
+    mismatched = sum(
+        0 if np.array_equal(got[k], oracle[k]) else 1 for k in oracle if k in got
+    )
+    ok = not missing and not extra and mismatched == 0
+    emit(
+        "elasticity/exactly_once",
+        0.0,
+        f"ok={ok};oracle_windows={len(oracle)};missing={len(missing)};"
+        f"extra={len(extra)};mismatched={mismatched}",
+    )
+    if not ok:
+        raise AssertionError(
+            f"elastic run violated exactly-once: missing={len(missing)} "
+            f"extra={len(extra)} mismatched={mismatched}"
+        )
+    return results
+
+
+if __name__ == "__main__":
+    main()

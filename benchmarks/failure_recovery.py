@@ -16,12 +16,16 @@ from repro.runtime import FailureScenario, SimConfig, run_flink, run_holon
 from repro.streaming import make_q7
 
 
-def scenarios():
+def scenarios(membership: tuple[int, ...]):
+    """The paper's §5.2 scenarios over the first two members of the actual
+    membership set — node ids come from the config, not hardcoded, so the
+    sweep keeps working when the initial membership is reconfigured."""
+    pair = tuple(membership[:2])
     return {
         "baseline": FailureScenario.baseline(),
-        "concurrent": FailureScenario.concurrent(),
-        "subsequent": FailureScenario.subsequent(),
-        "crash": FailureScenario.crash(),
+        "concurrent": FailureScenario.concurrent(nodes=pair),
+        "subsequent": FailureScenario.subsequent(nodes=pair),
+        "crash": FailureScenario.crash(nodes=pair),
     }
 
 
@@ -46,7 +50,7 @@ def main(quick: bool = False):
         ("flink", run_flink, cfg),
         ("flink_spare", run_flink, dataclasses.replace(cfg, flink_spare_slots=True)),
     ):
-        for name, scen in scenarios().items():
+        for name, scen in scenarios(cfgv.initial_membership).items():
             if system == "flink_spare" and name == "baseline":
                 continue
             with timer() as tm:

@@ -4,6 +4,7 @@ Prints ``name,us_per_call,derived`` CSV lines.  Sections:
   fig6_table2   failure recovery latency (Holon vs Flink-like)
   fig7_8        latency sensitivity under failures
   fig9          scalability with cluster size
+  elasticity    4→8→4 elastic transitions vs stop-the-world rebalance
   throughput    max-throughput (sim peak) + real dataplane events/s
   roofline      per-(arch x shape) roofline terms from the dry-run
   kernels       WCRDT fold/merge/topk microbenchmarks
@@ -22,6 +23,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (
+        elasticity,
         failure_recovery,
         kernels_bench,
         roofline,
@@ -37,6 +39,7 @@ def main() -> None:
         "fig6_table2": failure_recovery.main,
         "fig7_8": sensitivity.main,
         "fig9": scalability.main,
+        "elasticity": elasticity.main,
     }
     print("name,us_per_call,derived")
     failed = []

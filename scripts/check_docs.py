@@ -1,0 +1,69 @@
+#!/usr/bin/env python
+"""Docstring↔docs consistency gate (tier-1-adjacent, run by scripts/test.sh).
+
+Scans every .py file under src/, tests/, benchmarks/, examples/, scripts/
+for citations of repo markdown files, optionally with a section marker:
+
+    docs/protocol.md §3.2      DESIGN.md §6      README.md
+
+and asserts (1) the cited file exists, and (2) when a section is given, the
+file actually contains that `§N` marker (as its own token — `§3` is not
+satisfied by `§3.2` alone, but `§3.2` cites are checked verbatim).  This is
+what keeps "see docs/... §X" in docstrings from silently rotting.
+
+Exit 0 when every citation resolves; exit 1 with a listing otherwise.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+SCAN_DIRS = ("src", "tests", "benchmarks", "examples", "scripts")
+
+# a repo-relative markdown path, optionally followed by "§<sec>"; sections
+# are dot/hyphen-joined word tokens ("3", "3.2", "Perf", "Dry-run") — a
+# trailing sentence "." is not part of the section
+CITE = re.compile(
+    r"(?P<file>(?:docs/[\w./-]+\.md|(?:DESIGN|README|ROADMAP|PAPER|PAPERS|"
+    r"SNIPPETS|CHANGES|EXPERIMENTS)\.md))(?:\s*§(?P<sec>\w+(?:[-.]\w+)*))?"
+)
+
+
+def section_present(text: str, sec: str) -> bool:
+    # token match: "§3" must appear not immediately extended by ".x" or more
+    # digits (so citing §3 requires a real §3, not just §3.2 / §30)
+    return re.search(rf"§{re.escape(sec)}(?![\w.-])", text) is not None
+
+
+def main() -> int:
+    md_cache: dict[str, str | None] = {}
+    failures: list[str] = []
+    n_citations = 0
+    for d in SCAN_DIRS:
+        for py in sorted((ROOT / d).rglob("*.py")):
+            text = py.read_text(encoding="utf-8")
+            for m in CITE.finditer(text):
+                n_citations += 1
+                rel, sec = m.group("file"), m.group("sec")
+                if rel not in md_cache:
+                    p = ROOT / rel
+                    md_cache[rel] = p.read_text(encoding="utf-8") if p.exists() else None
+                body = md_cache[rel]
+                where = f"{py.relative_to(ROOT)}: cites {m.group(0)!r}"
+                if body is None:
+                    failures.append(f"{where} — {rel} does not exist")
+                elif sec is not None and not section_present(body, sec):
+                    failures.append(f"{where} — no section §{sec} in {rel}")
+    if failures:
+        print("check_docs: FAILED citations:", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print(f"check_docs: OK ({n_citations} citations resolved)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

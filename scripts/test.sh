@@ -9,7 +9,13 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-tier1() { python -m pytest -x -q -m "not slow and not multidevice" "$@"; }
+tier1() {
+  # docs gate: every `docs/... §X` / `DESIGN.md §X` cited in a docstring
+  # must exist, and the suite must at least collect cleanly
+  python scripts/check_docs.py
+  python -m pytest --collect-only -q >/dev/null
+  python -m pytest -x -q -m "not slow and not multidevice" "$@"
+}
 slow() { python -m pytest -q -m slow "$@"; }
 multidevice() {
   XLA_FLAGS="--xla_force_host_platform_device_count=8 ${XLA_FLAGS:-}" \

@@ -8,15 +8,25 @@ EXPERIMENTS.md.  This is the honest CPU-container stand-in for the paper's
 GCP/Kafka deployment: relative behaviour (recovery time, sensitivity,
 scalability) is reproduced; absolute wall-clock numbers are simulation time.
 """
-from repro.runtime.config import SimConfig, FailureScenario
+from repro.runtime.config import (
+    SimConfig,
+    FailureScenario,
+    Scenario,
+    ScenarioEvent,
+    as_scenario,
+)
 from repro.runtime.consumer import Consumer
 from repro.runtime.storage import CheckpointStorage
-from repro.runtime.harness import HolonHarness, run_holon
+from repro.runtime.harness import HolonHarness, assignment, run_holon
 from repro.runtime.flink_baseline import FlinkHarness, run_flink
 
 __all__ = [
     "SimConfig",
     "FailureScenario",
+    "Scenario",
+    "ScenarioEvent",
+    "as_scenario",
+    "assignment",
     "Consumer",
     "CheckpointStorage",
     "HolonHarness",

@@ -1,8 +1,10 @@
-"""Simulation cost model + failure scenarios.
+"""Simulation cost model + scenario DSL (failures and elastic reconfiguration).
 
 Constants mirror the paper's experimental setup (§5.1/§5.2) where stated, and
 conservative GCP-like values elsewhere.  All times in milliseconds of
-simulated time.
+simulated time.  Scenarios are sequences of timed control-plane events
+(crash / restart / scale_out / scale_in); the membership-change events are
+specified in docs/protocol.md §3.
 """
 from __future__ import annotations
 
@@ -20,6 +22,7 @@ class SimConfig:
     rate_per_partition: float = 10_000.0  # events/s
     num_batches: int = 400  # ~41 s of event time per partition
     seed: int = 0
+    skew: float = 0.0  # zipf exponent of per-partition load (0 = uniform)
 
     # --- node execution ---
     batch_proc_ms: float = 2.0  # fold+emit compute per batch (2vCPU node)
@@ -54,12 +57,72 @@ class SimConfig:
     def horizon_ms(self) -> float:
         return self.num_batches * self.batch_span_ms
 
+    @property
+    def initial_membership(self) -> tuple[int, ...]:
+        """Node ids present at t=0.  Scenarios reference membership through
+        this (not raw ``range(num_nodes)``) so scale events stay valid."""
+        return tuple(range(self.num_nodes))
+
+
+EVENT_KINDS = ("crash", "restart", "scale_out", "scale_in")
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioEvent:
+    """One timed control-plane action over a set of node ids."""
+
+    t_ms: float
+    kind: str  # one of EVENT_KINDS
+    nodes: tuple[int, ...]
+
+    def __post_init__(self):
+        if self.kind not in EVENT_KINDS:
+            raise ValueError(f"unknown scenario event kind {self.kind!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """General timed control-plane script: crashes, restarts, and elastic
+    membership changes (docs/protocol.md §3).  Build fluently:
+
+        Scenario("elastic").scale_out(4000, 4, 5).scale_in(9000, 4, 5)
+
+    ``crash``/``restart`` model unplanned failure + recovery of an existing
+    node; ``scale_out`` adds brand-new nodes (or revives drained ones) that
+    bootstrap from a live peer; ``scale_in`` drains nodes gracefully — final
+    delta flush + handoff checkpoints before departure.
+    """
+
+    name: str = "baseline"
+    events: tuple[ScenarioEvent, ...] = ()
+
+    def at(self, t_ms: float, kind: str, *nodes: int) -> "Scenario":
+        ev = ScenarioEvent(float(t_ms), kind, tuple(int(n) for n in nodes))
+        return dataclasses.replace(self, events=self.events + (ev,))
+
+    def crash(self, t_ms: float, *nodes: int) -> "Scenario":
+        return self.at(t_ms, "crash", *nodes)
+
+    def restart(self, t_ms: float, *nodes: int) -> "Scenario":
+        return self.at(t_ms, "restart", *nodes)
+
+    def scale_out(self, t_ms: float, *nodes: int) -> "Scenario":
+        return self.at(t_ms, "scale_out", *nodes)
+
+    def scale_in(self, t_ms: float, *nodes: int) -> "Scenario":
+        return self.at(t_ms, "scale_in", *nodes)
+
+    @classmethod
+    def baseline(cls) -> "Scenario":
+        return cls()
+
 
 @dataclasses.dataclass(frozen=True)
 class FailureScenario:
     """When nodes fail and (optionally) restart, in simulated ms.
 
-    The paper's three scenarios (§5.2):
+    The crash/restart-only ancestor of :class:`Scenario`, kept as the
+    ergonomic spelling of the paper's three scenarios (§5.2):
       concurrent: two nodes at t, restart t+10s
       subsequent: two nodes at t, t+5s; each restarts 10s after its failure
       crash:      two nodes at t, never restarted
@@ -70,33 +133,50 @@ class FailureScenario:
     fail_nodes: tuple[int, ...] = ()
     restart_times_ms: tuple[float, ...] = ()  # -1 = never
 
+    def to_scenario(self) -> Scenario:
+        s = Scenario(name=self.name)
+        for t, nid, rt in zip(self.fail_times_ms, self.fail_nodes, self.restart_times_ms):
+            s = s.crash(t, nid)
+            if rt >= 0:
+                s = s.restart(rt, nid)
+        return s
+
     @classmethod
     def baseline(cls):
         return cls()
 
     @classmethod
-    def concurrent(cls, t: float = 8000.0):
+    def concurrent(cls, t: float = 8000.0, nodes: tuple[int, int] = (0, 1)):
         return cls(
             name="concurrent",
             fail_times_ms=(t, t),
-            fail_nodes=(0, 1),
+            fail_nodes=tuple(nodes),
             restart_times_ms=(t + 10_000, t + 10_000),
         )
 
     @classmethod
-    def subsequent(cls, t: float = 8000.0):
+    def subsequent(cls, t: float = 8000.0, nodes: tuple[int, int] = (0, 1)):
         return cls(
             name="subsequent",
             fail_times_ms=(t, t + 5_000),
-            fail_nodes=(0, 1),
+            fail_nodes=tuple(nodes),
             restart_times_ms=(t + 10_000, t + 15_000),
         )
 
     @classmethod
-    def crash(cls, t: float = 8000.0):
+    def crash(cls, t: float = 8000.0, nodes: tuple[int, int] = (0, 1)):
         return cls(
             name="crash",
             fail_times_ms=(t, t),
-            fail_nodes=(0, 1),
+            fail_nodes=tuple(nodes),
             restart_times_ms=(-1.0, -1.0),
         )
+
+
+def as_scenario(scenario: "Scenario | FailureScenario | None") -> Scenario:
+    """Normalize any scenario spelling (or None) to the event-list form."""
+    if scenario is None:
+        return Scenario()
+    if isinstance(scenario, FailureScenario):
+        return scenario.to_scenario()
+    return scenario

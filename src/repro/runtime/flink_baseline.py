@@ -23,7 +23,9 @@ from __future__ import annotations
 
 import math
 
-from repro.runtime.config import FailureScenario, SimConfig
+import numpy as np
+
+from repro.runtime.config import FailureScenario, Scenario, SimConfig, as_scenario
 from repro.runtime.consumer import Consumer
 from repro.runtime.sim import Sim
 from repro.streaming.events import EventBatch
@@ -44,8 +46,12 @@ class FlinkHarness:
             events_per_batch=cfg.events_per_batch,
             rate_per_partition=cfg.rate_per_partition,
             seed=cfg.seed,
+            skew=cfg.skew,
         )
         self.log = log if log is not None else generate_log(nx)
+        # same load-proportional batch cost as the Holon runtime, so skewed
+        # logs keep the A/B cost models apples-to-apples
+        self.valid_frac = np.asarray(self.log.valid, np.float64).mean(axis=-1)
         self.sim = Sim()
         self.consumer = Consumer(window_len=cfg.window_len)
         self.tree_depth = max(
@@ -80,7 +86,10 @@ class FlinkHarness:
             return
         b = self.idx[pid]
         self.idx[pid] += 1
-        self.consumer.count_events(self.sim.now, cfg.events_per_batch)
+        frac = float(self.valid_frac[pid, b])
+        self.consumer.count_events(
+            self.sim.now, int(round(frac * cfg.events_per_batch))
+        )
         # local watermark after this batch = end of batch span
         wm = (b + 1) * cfg.batch_span_ms
         closed = int(wm // cfg.window_len)
@@ -89,7 +98,8 @@ class FlinkHarness:
                 self.forwarded.add((wid, pid))
                 delay = self.tree_depth * (cfg.shuffle_hop_ms + BUFFER_TIMEOUT_MS)
                 self.sim.after(delay, lambda w=wid, p=pid: self._arrive(w, p))
-        self.sim.after(cfg.batch_proc_ms, lambda: self._loop_part(pid))
+        proc = max(cfg.batch_proc_ms * frac, cfg.batch_proc_ms / cfg.events_per_batch)
+        self.sim.after(proc, lambda: self._loop_part(pid))
 
     def _arrive(self, wid: int, pid: int):
         if self.job_dead or self.down:
@@ -152,25 +162,35 @@ class FlinkHarness:
         self.sim.after(cfg.flink_restart_ms + cfg.flink_restore_ms, up)
 
     # ---- driver ---------------------------------------------------------------
-    def run(self, scenario: FailureScenario | None = None, horizon_ms: float | None = None):
-        scenario = scenario or FailureScenario.baseline()
+    def run(
+        self,
+        scenario: Scenario | FailureScenario | None = None,
+        horizon_ms: float | None = None,
+    ):
+        scenario = as_scenario(scenario)
         cfg = self.cfg
         for pid in range(cfg.num_partitions):
             self.sim.after(0.0, lambda p=pid: self._loop_part(p))
         self.sim.after(cfg.flink_ckpt_interval_ms, self._loop_ckpt)
-        for t, nid, rt in zip(
-            scenario.fail_times_ms, scenario.fail_nodes, scenario.restart_times_ms
-        ):
-            self.sim.at(t, lambda n=nid: self.fail_node(n))
-            if rt >= 0:
-                self.sim.at(rt, lambda n=nid: self.restart_node(n))
+        for ev in scenario.events:
+            if ev.kind == "crash":
+                for nid in ev.nodes:
+                    self.sim.at(ev.t_ms, lambda n=nid: self.fail_node(n))
+            elif ev.kind == "restart":
+                for nid in ev.nodes:
+                    self.sim.at(ev.t_ms, lambda n=nid: self.restart_node(n))
+            else:
+                raise ValueError(
+                    f"Flink baseline is fixed-membership; {ev.kind!r} events "
+                    "only apply to the Holon runtime"
+                )
         horizon = horizon_ms if horizon_ms is not None else cfg.horizon_ms + 5000.0
         self.sim.run(until=horizon)
         return self.consumer
 
 
 def run_flink(
-    cfg: SimConfig, query: Query, scenario: FailureScenario | None = None,
+    cfg: SimConfig, query: Query, scenario: Scenario | FailureScenario | None = None,
     horizon_ms: float | None = None, log: EventBatch | None = None,
 ) -> Consumer:
     h = FlinkHarness(cfg, query, log=log)

@@ -16,12 +16,26 @@ Every node runs four independent loops (no global coordination anywhere):
                and the next round ships the full resident state.  With
                ``cfg.delta_sync=False`` the loop broadcasts whole replicas
                (the paper's original protocol, kept for comparison).
+               Message-sequence walkthrough: docs/protocol.md §2.
   checkpoint : every ``ckpt_interval`` put each owned partition's
                (nxt_idx, nxt_odx, emitted_upto, replica, local) to storage —
-               unsynchronized, local decision ("sometimes do").
-  control    : heartbeat peers; on silence > ``hb_timeout`` recompute the
-               deterministic assignment over live nodes and *steal* orphaned
-               partitions by fetching their checkpoints (Recover).
+               unsynchronized, local decision ("sometimes do").  Snapshots
+               carry their delta-coverage baseline and the membership epoch.
+  control    : heartbeat peers (beacons carry the membership epoch; a
+               ``leaving`` beacon announces graceful departure); on silence
+               > ``hb_timeout`` — or on a leaving beacon — recompute the
+               deterministic rendezvous assignment over the live membership
+               and *steal* orphaned partitions by fetching their checkpoints
+               (Recover).  Walkthrough: docs/protocol.md §3.
+
+Membership is fully dynamic: ``HolonHarness.reconfigure(add=…, remove=…)`` is
+the operator control-plane event.  New nodes bootstrap by requesting a
+full-state sync from the first live peer they hear (docs/protocol.md §3.1);
+removed nodes drain — final delta flush, fresh per-partition handoff
+checkpoints, then a leaving beacon (docs/protocol.md §3.2) — so planned
+scale-in pays no replay, unlike a crash.  Partition placement is rendezvous
+hashing over the live view: any two converged views agree on every owner,
+and membership churn only moves the partitions it must.
 
 Failure injection flips ``alive``; restart wipes volatile state and rejoins —
 recovery is work stealing like any other reconfiguration (paper §4.3).
@@ -31,14 +45,14 @@ Exactly-once: deterministic replay from checkpoints + consumer dedup by
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
+from typing import Any, Iterable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import wcrdt as W
-from repro.runtime.config import FailureScenario, SimConfig
+from repro.runtime.config import FailureScenario, Scenario, SimConfig, as_scenario
 from repro.runtime.consumer import Consumer
 from repro.runtime.sim import Sim
 from repro.runtime.storage import CheckpointStorage, PartitionCheckpoint
@@ -46,12 +60,31 @@ from repro.streaming.events import EventBatch
 from repro.streaming.generator import NexmarkConfig, generate_log
 from repro.streaming.queries import Query
 
+_M64 = (1 << 64) - 1
 
-def assignment(pid: int, live_nodes: list[int]) -> int:
-    """Deterministic partition→node rule over the live set (rendezvous)."""
-    if not live_nodes:
-        return -1
-    return live_nodes[pid % len(live_nodes)]
+
+def _hrw_score(pid: int, nid: int) -> int:
+    """Deterministic 64-bit mix of (partition, node) — splitmix64 finalizer,
+    so placement is identical across processes (no Python hash salt)."""
+    x = (pid * 0x9E3779B97F4A7C15 + (nid + 1) * 0xBF58476D1CE4E5B9) & _M64
+    x ^= x >> 30
+    x = (x * 0xBF58476D1CE4E5B9) & _M64
+    x ^= x >> 27
+    x = (x * 0x94D049BB133111EB) & _M64
+    return x ^ (x >> 31)
+
+
+def assignment(pid: int, live_nodes: Iterable[int]) -> int:
+    """Deterministic partition→node rule over the live membership set:
+    rendezvous (highest-random-weight) hashing.  Two nodes with converged
+    views agree on every owner, and a membership change moves only the
+    partitions whose winner joined or left (tests/test_reconfig.py)."""
+    best, best_score = -1, -1
+    for n in live_nodes:
+        s = _hrw_score(pid, n)
+        if s > best_score or (s == best_score and n > best):
+            best, best_score = n, s
+    return best
 
 
 @dataclasses.dataclass
@@ -76,6 +109,10 @@ class HolonNode:
         # delta sync: per-peer acked (folded, progress) baseline per shared
         # spec — what the peer is known to hold; absent = ship full state
         self.peer_baseline: dict[int, tuple] = {}
+        # dynamic membership (docs/protocol.md §3)
+        self.epoch = 0  # highest membership epoch seen (gossiped in beacons)
+        self.departing = False  # set while draining for scale-in
+        self._bootstrap_pending = False  # joiner: request state on first hb
 
     # ---- lifecycle ---------------------------------------------------------
     def boot(self, initial_pids: list[int]):
@@ -103,8 +140,28 @@ class HolonNode:
         self.last_hb = {}
         self._rr = 0
         self.peer_baseline = {}
+        self.departing = False
+        self._bootstrap_pending = False
+        self.h.unsubscribed.discard(self.nid)  # rejoin the broadcast stream
         self.boot([])
         # control loop will steal this node's assigned partitions
+
+    def drain(self):
+        """Graceful scale-in (docs/protocol.md §3.2): flush a final delta to
+        every peer, write fresh handoff checkpoints for every owned
+        partition, announce departure, leave.  The flush is scheduled before
+        the leaving beacon, and the simulator delivers FIFO per timestamp,
+        so peers rebalance only after our state is on the wire — takeover
+        reads a checkpoint at the exact input frontier (no replay)."""
+        if not self.alive or self.departing:
+            return
+        self.departing = True
+        self._publish_sync()
+        for pid in list(self.owned):
+            self._handoff(pid)
+        self._broadcast_hb(leaving=True)
+        self.h.unsubscribed.add(self.nid)  # close our broadcast subscription
+        self.alive = False
 
     # ---- helpers -----------------------------------------------------------
     def _adopt(self, pid: int, ckpt: PartitionCheckpoint | None):
@@ -127,6 +184,32 @@ class HolonNode:
             del self.meta[pid]
             del self.locals[pid]
 
+    def _handoff(self, pid: int):
+        """Planned ownership release: put a checkpoint at the *current*
+        frontier, then drop.  The next owner resumes from nxt_idx instead of
+        replaying from the last periodic snapshot — this is what makes
+        scale-in / rebalance nearly free relative to crash recovery."""
+        m = self.meta[pid]
+        ck = self._checkpoint_of(pid, m)
+        self.h.sim.after(
+            self.h.cfg.storage_rtt_ms, lambda p=pid, c=ck: self.h.storage.put(p, c)
+        )
+        self._drop(pid)
+
+    def _checkpoint_of(self, pid: int, m: PartitionMeta) -> PartitionCheckpoint:
+        return PartitionCheckpoint(
+            nxt_idx=m.idx,
+            nxt_odx=m.odx,
+            emitted_upto=m.emitted_upto,
+            shared=self.replica,
+            local=self.locals[pid],
+            # coverage marker of the shared snapshot: recovery knows
+            # exactly which deltas the checkpoint subsumes, and peers'
+            # domination checks replay deterministically from it
+            baseline=self.h.marker_of(self.replica),
+            epoch=self.epoch,
+        )
+
     def _live_view(self) -> list[int]:
         now = self.h.sim.now
         live = [self.nid]
@@ -135,16 +218,51 @@ class HolonNode:
                 live.append(nid)
         return sorted(set(live))
 
-    def _broadcast_hb(self):
+    def _peers(self) -> list["HolonNode"]:
+        """Everyone else still subscribed to the broadcast stream (drained
+        nodes closed their subscription, so nobody pays to publish to them —
+        restart/scale_out re-subscribes)."""
+        return [
+            n
+            for n in self.h.nodes.values()
+            if n.nid != self.nid and n.nid not in self.h.unsubscribed
+        ]
+
+    def _broadcast_hb(self, leaving: bool = False):
+        if not self.alive and not leaving:
+            return
+        t, ep, joining = self.h.sim.now, self.epoch, self._bootstrap_pending
+        for other in self._peers():
+            self.h.sim.after(
+                self.h.cfg.broadcast_delay_ms,
+                lambda o=other, s=self.nid, tt=t, e=ep, lv=leaving, jn=joining:
+                    o._on_hb(s, tt, e, lv, jn),
+            )
+
+    def _on_hb(self, sender: int, t: float, epoch: int, leaving: bool,
+               joining: bool = False):
         if not self.alive:
             return
-        t = self.h.sim.now
-        for other in self.h.nodes:
-            if other.nid != self.nid:
-                self.h.sim.after(
-                    self.h.cfg.broadcast_delay_ms,
-                    lambda o=other, s=self.nid, tt=t: o.last_hb.__setitem__(s, tt),
-                )
+        self.epoch = max(self.epoch, epoch)
+        if leaving:
+            # graceful departure: drop the peer from the live view *now*
+            # (no hb_timeout wait) and take over its partitions promptly
+            self.last_hb.pop(sender, None)
+            self.peer_baseline.pop(sender, None)
+            self._rebalance(self.generation)
+            return
+        self.last_hb[sender] = max(self.last_hb.get(sender, -1.0), t)
+        if self._bootstrap_pending and not joining:
+            # joiner bootstrap (docs/protocol.md §3.1): ask the first
+            # *settled* peer we hear for its full state (a co-joiner's beacon
+            # carries joining=True — its empty replica would waste the
+            # one-shot handshake); the reply rides the ordinary sync path
+            # with no baseline, so it merges unconditionally
+            self._bootstrap_pending = False
+            self.h.sim.after(
+                self.h.cfg.broadcast_delay_ms,
+                lambda s=sender: self.h.nodes[s]._on_state_request(self.nid),
+            )
 
     # ---- loops ---------------------------------------------------------------
     def _loop_exec(self, gen: int):
@@ -158,30 +276,37 @@ class HolonNode:
             for _ in range(len(self.owned)):
                 pid = self.owned[self._rr % len(self.owned)]
                 self._rr += 1
-                if self._try_process(pid):
-                    delay = cfg.batch_proc_ms
+                cost = self._try_process(pid)
+                if cost is not None:
+                    delay = cost
                     break
         self.h.sim.after(delay, lambda: self._loop_exec(gen))
 
-    def _try_process(self, pid: int) -> bool:
+    def _try_process(self, pid: int) -> float | None:
+        """Fold the next available batch; returns its processing cost in ms
+        (scaled by the batch's valid-event fraction, so skewed loads cost
+        what they carry), or None when nothing was processed."""
         cfg, q = self.h.cfg, self.h.query
         m = self.meta[pid]
         if m.idx >= cfg.num_batches:
             self._emit_ready(pid)  # drain tail windows as gwm advances
-            return False
+            return None
         # batch b becomes available once the producer has written it
         avail = (m.idx + 1) * cfg.batch_span_ms
         if self.h.sim.now < avail:
             self._emit_ready(pid)
-            return False
+            return None
         batch = self.h.batch(pid, m.idx)
+        frac = float(self.h.valid_frac[pid, m.idx])
         self.replica, self.locals[pid] = self.h.fold_fn(
             self.replica, self.locals[pid], batch, pid, m.idx
         )
         m.idx += 1
-        self.h.consumer.count_events(self.h.sim.now, cfg.events_per_batch)
+        self.h.consumer.count_events(
+            self.h.sim.now, int(round(frac * cfg.events_per_batch))
+        )
         self._emit_ready(pid)
-        return True
+        return max(cfg.batch_proc_ms * frac, cfg.batch_proc_ms / cfg.events_per_batch)
 
     def _emit_ready(self, pid: int):
         """Emit every window completed under the current global watermark."""
@@ -205,28 +330,50 @@ class HolonNode:
     def _loop_sync(self, gen: int):
         if not self.alive or gen != self.generation:
             return
-        if self.h.query.shared_specs:
-            snap = self.replica
-            marker = self.h.marker_of(snap)
-            for other in self.h.nodes:
-                if other.nid == self.nid:
-                    continue
-                if self.h.cfg.delta_sync:
-                    base = self.peer_baseline.get(other.nid, self.h.zero_base)
-                    payload = self.h.delta_fn(snap, base)
-                    shipped = self.h.delta_bytes(payload)
-                else:
-                    base, payload, shipped = None, snap, self.h.full_state_bytes
-                self.h.sync_msgs += 1
-                self.h.sync_bytes += shipped
-                self.h.sync_bytes_full += self.h.full_state_bytes
-                self.h.sim.after(
-                    self.h.cfg.broadcast_delay_ms,
-                    lambda o=other, pay=payload, b=base, mk=marker: o._on_sync(
-                        pay, self.nid, b, mk
-                    ),
-                )
+        self._publish_sync()
         self.h.sim.after(self.h.cfg.sync_interval_ms, lambda: self._loop_sync(gen))
+
+    def _publish_sync(self):
+        """One background sync round: per-peer delta (or full replica)."""
+        if not self.h.query.shared_specs:
+            return
+        snap = self.replica
+        marker = self.h.marker_of(snap)
+        for other in self._peers():
+            if self.h.cfg.delta_sync:
+                base = self.peer_baseline.get(other.nid, self.h.zero_base)
+                payload = self.h.delta_fn(snap, base)
+                shipped = self.h.delta_bytes(payload)
+            else:
+                base, payload, shipped = None, snap, self.h.full_state_bytes
+            self.h.sync_msgs += 1
+            self.h.sync_bytes += shipped
+            self.h.sync_bytes_full += self.h.full_state_bytes
+            self.h.sim.after(
+                self.h.cfg.broadcast_delay_ms,
+                lambda o=other, pay=payload, b=base, mk=marker: o._on_sync(
+                    pay, self.nid, b, mk
+                ),
+            )
+
+    def _on_state_request(self, requester: int):
+        """Serve a joiner's bootstrap: reply with the full replica and its
+        marker, no baseline — the joiner merges unconditionally and acks,
+        which also seeds our delta baseline for it."""
+        if not self.alive or not self.h.query.shared_specs:
+            return
+        snap = self.replica
+        marker = self.h.marker_of(snap)
+        self.h.bootstrap_served.append((requester, self.nid))
+        self.h.sync_msgs += 1
+        self.h.sync_bytes += self.h.full_state_bytes
+        self.h.sync_bytes_full += self.h.full_state_bytes
+        self.h.sim.after(
+            self.h.cfg.broadcast_delay_ms,
+            lambda r=requester, s=snap, mk=marker: self.h.nodes[r]._on_sync(
+                s, self.nid, None, mk
+            ),
+        )
 
     def _on_sync(self, snap, src: int | None = None, base=None, marker=None):
         if not self.alive:
@@ -280,8 +427,15 @@ class HolonNode:
         if not self.alive or gen != self.generation:
             return
         self._broadcast_hb()
+        self._rebalance(gen)
+        self.h.sim.after(self.h.cfg.hb_interval_ms, lambda: self._loop_control(gen))
+
+    def _rebalance(self, gen: int):
+        """Steal partitions the rendezvous rule assigns to me that I don't
+        own; hand off ones whose owner is now someone else."""
+        if not self.alive or gen != self.generation:
+            return
         live = self._live_view()
-        # steal partitions assigned to me that I don't own; drop ones that left
         for pid in range(self.h.cfg.num_partitions):
             tgt = assignment(pid, live)
             if tgt == self.nid and pid not in self.meta:
@@ -290,8 +444,7 @@ class HolonNode:
                     lambda p=pid, g=gen: self._finish_steal(p, g),
                 )
             elif tgt != self.nid and pid in self.meta:
-                self._drop(pid)
-        self.h.sim.after(self.h.cfg.hb_interval_ms, lambda: self._loop_control(gen))
+                self._handoff(pid)
 
     def _finish_steal(self, pid: int, gen: int):
         if not self.alive or gen != self.generation or pid in self.meta:
@@ -305,18 +458,7 @@ class HolonNode:
         if not self.alive or gen != self.generation:
             return
         for pid in list(self.owned):
-            m = self.meta[pid]
-            ck = PartitionCheckpoint(
-                nxt_idx=m.idx,
-                nxt_odx=m.odx,
-                emitted_upto=m.emitted_upto,
-                shared=self.replica,
-                local=self.locals[pid],
-                # coverage marker of the shared snapshot: recovery knows
-                # exactly which deltas the checkpoint subsumes, and peers'
-                # domination checks replay deterministically from it
-                baseline=self.h.marker_of(self.replica),
-            )
+            ck = self._checkpoint_of(pid, self.meta[pid])
             # async durable write completes after one storage RTT
             self.h.sim.after(
                 self.h.cfg.storage_rtt_ms, lambda p=pid, c=ck: self.h.storage.put(p, c)
@@ -334,9 +476,13 @@ class HolonHarness:
             events_per_batch=cfg.events_per_batch,
             rate_per_partition=cfg.rate_per_partition,
             seed=cfg.seed,
+            skew=cfg.skew,
         )
         self.log = log if log is not None else generate_log(nx)
         self._log_np = jax.tree.map(np.asarray, self.log)
+        # per-(partition, batch) valid-event fraction: drives the modeled
+        # processing cost, so load skew translates into node load
+        self.valid_frac = np.asarray(self._log_np.valid, np.float64).mean(axis=-1)
         self.sim = Sim()
         self.storage = CheckpointStorage()
         self.consumer = Consumer(window_len=cfg.window_len)
@@ -361,7 +507,17 @@ class HolonHarness:
         self.sync_nacks = 0
         self.sync_bytes = 0.0  # bytes actually shipped (delta or full)
         self.sync_bytes_full = 0.0  # what full-state sync would have shipped
-        self.nodes = [HolonNode(n, self) for n in range(cfg.num_nodes)]
+        # dynamic membership: nid -> node, every node ever registered (the
+        # broadcast-stream subscriber list); epoch bumps per reconfigure
+        self.nodes: dict[int, HolonNode] = {
+            n: HolonNode(n, self) for n in cfg.initial_membership
+        }
+        self.membership_epoch = 0
+        # broadcast-stream subscription registry: drained nodes unsubscribe,
+        # so publishers stop paying per-peer sync cost for them
+        self.unsubscribed: set[int] = set()
+        # (requester, server) log of §3.1 bootstrap handshakes (test probe)
+        self.bootstrap_served: list[tuple[int, int]] = []
 
     @staticmethod
     def marker_of(snap) -> tuple:
@@ -377,17 +533,82 @@ class HolonHarness:
     def batch(self, pid: int, idx: int) -> EventBatch:
         return jax.tree.map(lambda x: x[pid, idx], self.log)
 
-    def run(self, scenario: FailureScenario | None = None, horizon_ms: float | None = None):
-        scenario = scenario or FailureScenario.baseline()
-        for n in self.nodes:
-            pids = [p for p in range(self.cfg.num_partitions) if p % self.cfg.num_nodes == n.nid]
-            n.boot(pids)
-        for t, nid, rt in zip(
-            scenario.fail_times_ms, scenario.fail_nodes, scenario.restart_times_ms
-        ):
-            self.sim.at(t, lambda n=nid: self.nodes[n].fail())
-            if rt >= 0:
-                self.sim.at(rt, lambda n=nid: self.nodes[n].restart())
+    # ---- control plane --------------------------------------------------------
+    def reconfigure(self, add: Iterable[int] = (), remove: Iterable[int] = ()):
+        """Operator control-plane event at the current sim time: grow and/or
+        shrink the membership.  Added nodes bootstrap from a live peer;
+        removed nodes drain (docs/protocol.md §3).  Bumps the membership
+        epoch, which gossips through heartbeats into checkpoint markers."""
+        add, remove = tuple(add), tuple(remove)
+        if not add and not remove:
+            return
+        self.membership_epoch += 1
+        # the reconfigure command rides the control plane: every live
+        # subscriber learns the new epoch with the event (so a drain's
+        # leaving beacon below already gossips it) — crashed nodes catch up
+        # from peers' beacons if they ever restart
+        for node in self.nodes.values():
+            if node.alive:
+                node.epoch = max(node.epoch, self.membership_epoch)
+        for nid in add:
+            nid = int(nid)
+            node = self.nodes.get(nid)
+            if node is None:
+                node = HolonNode(nid, self)
+                self.nodes[nid] = node
+                node.epoch = self.membership_epoch
+                node._bootstrap_pending = bool(self.query.shared_specs)
+                node.boot([])
+            elif not node.alive:
+                node.epoch = max(node.epoch, self.membership_epoch)
+                node.restart()
+        for nid in remove:
+            node = self.nodes.get(int(nid))
+            if node is None:
+                continue
+            if node.alive:
+                node.drain()
+            else:
+                # decommission a crashed node: it cannot drain, but it must
+                # stop costing publishers; peers already rebalanced via
+                # hb_timeout when it went silent
+                self.unsubscribed.add(int(nid))
+
+    def _node(self, nid: int) -> HolonNode:
+        node = self.nodes.get(nid)
+        if node is None:
+            raise KeyError(
+                f"scenario references node {nid}, which was never a member "
+                f"(known: {sorted(self.nodes)})"
+            )
+        return node
+
+    def run(
+        self,
+        scenario: Scenario | FailureScenario | None = None,
+        horizon_ms: float | None = None,
+    ):
+        scenario = as_scenario(scenario)
+        live0 = sorted(self.nodes)
+        for n in self.nodes.values():
+            n.boot(
+                [
+                    p
+                    for p in range(self.cfg.num_partitions)
+                    if assignment(p, live0) == n.nid
+                ]
+            )
+        for ev in scenario.events:
+            if ev.kind == "crash":
+                for nid in ev.nodes:
+                    self.sim.at(ev.t_ms, lambda n=nid: self._node(n).fail())
+            elif ev.kind == "restart":
+                for nid in ev.nodes:
+                    self.sim.at(ev.t_ms, lambda n=nid: self._node(n).restart())
+            elif ev.kind == "scale_out":
+                self.sim.at(ev.t_ms, lambda ns=ev.nodes: self.reconfigure(add=ns))
+            elif ev.kind == "scale_in":
+                self.sim.at(ev.t_ms, lambda ns=ev.nodes: self.reconfigure(remove=ns))
         horizon = horizon_ms if horizon_ms is not None else self.cfg.horizon_ms + 5000.0
         self.sim.run(until=horizon)
         # expose sync-bandwidth counters on the consumer (benchmark probe)
@@ -399,7 +620,7 @@ class HolonHarness:
 
 
 def run_holon(
-    cfg: SimConfig, query: Query, scenario: FailureScenario | None = None,
+    cfg: SimConfig, query: Query, scenario: Scenario | FailureScenario | None = None,
     horizon_ms: float | None = None, log: EventBatch | None = None,
 ) -> Consumer:
     h = HolonHarness(cfg, query, log=log)

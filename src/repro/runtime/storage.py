@@ -24,6 +24,11 @@ class PartitionCheckpoint:
     # Host-side numpy (derivable from ``shared``, but kept materialized so
     # storage can compare coverage without touching device arrays).
     baseline: Any = None
+    # membership epoch the checkpointing node had gossiped when it took the
+    # snapshot (docs/protocol.md §3.3): recovery can tell a pre- from a
+    # post-reconfiguration checkpoint, and put() prefers the newer view on
+    # otherwise-equal snapshots.
+    epoch: int = 0
 
 
 def _coverage(ckpt: PartitionCheckpoint) -> float:
@@ -44,11 +49,10 @@ class CheckpointStorage:
         cur = self._data.get(pid)
         # Algorithm 2: lattice merge keeps the state with the largest nxtIdx;
         # ties broken by delta-sync coverage (richer gossip wins, so recovery
-        # replays the fewest deltas).
-        if (
-            cur is None
-            or ckpt.nxt_idx > cur.nxt_idx
-            or (ckpt.nxt_idx == cur.nxt_idx and _coverage(ckpt) >= _coverage(cur))
+        # replays the fewest deltas), then by membership epoch (newer view).
+        if cur is None or (
+            (ckpt.nxt_idx, _coverage(ckpt), ckpt.epoch)
+            >= (cur.nxt_idx, _coverage(cur), cur.epoch)
         ):
             self._data[pid] = ckpt
 

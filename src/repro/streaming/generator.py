@@ -30,6 +30,11 @@ class NexmarkConfig:
     rate_per_partition: float = 10_000.0  # events / second (event time)
     seed: int = 0
     base_ts: int = 0
+    # zipf exponent of per-partition load: partition p carries a
+    # (p+1)^-skew fraction of valid events (0 = uniform, every event valid).
+    # Batch shapes and spans are unchanged — cold partitions just pad with
+    # invalid events, spread evenly so watermarks still track the span.
+    skew: float = 0.0
 
     @property
     def batch_span_ms(self) -> float:
@@ -61,6 +66,15 @@ def _gen_batch(cfg: NexmarkConfig, partition: jax.Array, batch_idx: jax.Array) -
     price = jnp.exp(jax.random.normal(k_price, (B,)) * 1.0 + 4.0).astype(jnp.float32)
     bidder = jax.random.randint(k_bidder, (B,), 0, 10_000).astype(jnp.uint32)
 
+    # Skewed load: partition p keeps a (p+1)^-skew fraction of its events,
+    # Bresenham-spread across the (sorted) batch, with the last event always
+    # kept — so even an extremely cold partition advances its watermark to
+    # the span's end every batch and can never freeze the global watermark.
+    frac = (partition.astype(jnp.float32) + 1.0) ** jnp.float32(-cfg.skew)
+    lane_f = jnp.arange(B, dtype=jnp.float32)
+    valid = jnp.floor((lane_f + 1.0) * frac) > jnp.floor(lane_f * frac)
+    valid = valid | (jnp.arange(B) == B - 1)
+
     return EventBatch(
         ts=ts,
         kind=kind.astype(jnp.int32),
@@ -68,7 +82,7 @@ def _gen_batch(cfg: NexmarkConfig, partition: jax.Array, batch_idx: jax.Array) -
         price=price,
         category=category,
         bidder=bidder,
-        valid=jnp.ones((B,), jnp.bool_),
+        valid=valid,
     )
 
 

@@ -7,7 +7,8 @@ The fallback implements exactly the subset these tests use:
   each from a ``random.Random`` seeded by the test's qualified name (stable
   across runs and machines, so failures reproduce).
 * ``settings.register_profile / load_profile`` with ``max_examples``.
-* ``st.integers / floats / lists / tuples / booleans / sampled_from``.
+* ``st.integers / floats / lists (incl. unique=) / tuples / booleans /
+  sampled_from``.
 
 No shrinking, no database — a failing draw reports its kwargs and the shim's
 seed; install hypothesis for the full experience.
@@ -53,10 +54,24 @@ except ImportError:
             return _Strategy(lambda rng: rng.choice(elements))
 
         @staticmethod
-        def lists(elements, min_size=0, max_size=8):
+        def lists(elements, min_size=0, max_size=8, unique=False):
             def draw(rng):
                 n = rng.randint(min_size, max_size)
-                return [elements.example(rng) for _ in range(n)]
+                if not unique:
+                    return [elements.example(rng) for _ in range(n)]
+                out: list = []
+                attempts = 0
+                while len(out) < n and attempts < 50 * n:  # bounded retry
+                    attempts += 1
+                    x = elements.example(rng)
+                    if x not in out:
+                        out.append(x)
+                if len(out) < min_size:  # mirror hypothesis' Unsatisfiable
+                    raise AssertionError(
+                        f"lists(unique=True): drew only {len(out)} distinct "
+                        f"elements, min_size={min_size}"
+                    )
+                return out
 
             return _Strategy(draw)
 
