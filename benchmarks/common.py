@@ -1,13 +1,31 @@
-"""Shared benchmark plumbing: CSV emission per the harness contract."""
+"""Shared benchmark plumbing: CSV emission per the harness contract, plus a
+row registry so drivers (benchmarks/run.py) can also write the results as
+machine-readable JSON (section -> rows) for the perf trajectory."""
 from __future__ import annotations
 
 import sys
 import time
 
+# section -> [row, ...]; populated by emit() while a section is active
+ROWS: dict[str, list[dict]] = {}
+_section: str | None = None
+
+
+def set_section(name: str | None) -> None:
+    """Route subsequent emit() rows to ``name`` (None stops recording)."""
+    global _section
+    _section = name
+    if name is not None:
+        ROWS.setdefault(name, [])
+
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     print(f"{name},{us_per_call:.3f},{derived}")
     sys.stdout.flush()
+    if _section is not None:
+        ROWS[_section].append(
+            {"name": name, "us_per_call": round(us_per_call, 3), "derived": derived}
+        )
 
 
 class timer:

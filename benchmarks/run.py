@@ -1,6 +1,8 @@
 """Benchmark harness entry point — one section per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV lines.  Sections:
+Prints ``name,us_per_call,derived`` CSV lines and writes the same rows as
+machine-readable JSON (``{"sections": {section: [row, ...]}}``) to
+``BENCH_pr4.json`` so the perf trajectory accumulates across PRs.  Sections:
   fig6_table2   failure recovery latency (Holon vs Flink-like)
   fig7_8        latency sensitivity under failures
   fig9          scalability with cluster size
@@ -10,16 +12,24 @@ Prints ``name,us_per_call,derived`` CSV lines.  Sections:
   kernels       WCRDT fold/merge/topk microbenchmarks
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--quick] [--only SECTION]
+                                               [--json PATH]
 """
 import argparse
+import json
+import platform
 import sys
 import traceback
+from pathlib import Path
+
+BENCH_JSON = Path(__file__).resolve().parents[1] / "BENCH_pr4.json"
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", type=str, default=None)
+    ap.add_argument("--json", type=Path, default=BENCH_JSON,
+                    help="where to write the machine-readable results")
     args = ap.parse_args()
 
     from benchmarks import (
@@ -41,17 +51,66 @@ def main() -> None:
         "fig9": scalability.main,
         "elasticity": elasticity.main,
     }
+    from benchmarks import common
+
+    if args.only and args.only not in sections:
+        ap.error(f"--only must be one of {sorted(sections)}; got {args.only!r}")
     print("name,us_per_call,derived")
     failed = []
     for name, fn in sections.items():
         if args.only and args.only != name:
             continue
+        common.set_section(name)
         try:
             fn(quick=args.quick)
         except Exception as e:  # noqa: BLE001
             failed.append(name)
             traceback.print_exc()
             print(f"{name}/ERROR,0,{repr(e)[:120]}")
+        finally:
+            common.set_section(None)
+    # JSON mirror of the CSV rows — written even on partial failure, and
+    # merged over any existing file so a --only/--quick run refreshes just
+    # the sections it executed instead of discarding the rest.  A section
+    # that errored this run keeps its last good rows (its partial rows are
+    # worse than stale ones); section_meta records per-section provenance
+    # so --quick and full-run rows are distinguishable after a merge.
+    prev_sections, prev_failed, prev_meta = {}, [], {}
+    if args.json.exists():
+        try:
+            prev = json.loads(args.json.read_text())
+            if isinstance(prev, dict):  # wrong-shape JSON: rewrite from scratch
+                def _dict(v):
+                    return v if isinstance(v, dict) else {}
+
+                prev_sections = _dict(prev.get("sections"))
+                raw_failed = prev.get("failed_sections")
+                if isinstance(raw_failed, list):
+                    prev_failed = [s for s in raw_failed if isinstance(s, str)]
+                prev_meta = _dict(prev.get("section_meta"))
+        except (json.JSONDecodeError, OSError):
+            pass  # unreadable file: rewrite from this run
+    good = {
+        name: rows for name, rows in common.ROWS.items()
+        if name not in failed or name not in prev_sections
+    }
+    meta = {
+        name: {"quick": bool(args.quick), "failed": name in failed}
+        for name in good
+    }
+    args.json.write_text(json.dumps(
+        {
+            "schema": "holon-bench-v1",
+            "only": args.only,
+            "platform": platform.platform(),
+            "failed_sections": sorted(
+                (set(prev_failed) - set(common.ROWS)) | set(failed)
+            ),
+            "section_meta": {**prev_meta, **meta},
+            "sections": {**prev_sections, **good},
+        },
+        indent=2,
+    ) + "\n")
     if failed:
         sys.exit(1)
 

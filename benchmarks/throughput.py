@@ -1,4 +1,7 @@
-"""Paper §5.3 max-throughput experiment (Q0/Q4/Q7) + real-dataplane rates.
+"""Paper §5.3 max-throughput experiment (Q0/Q4/Q7) + real-dataplane rates,
+plus the sliding-window q5 (EXPERIMENTS.md §Perf iteration D): overlapping
+windows multiply fold lanes and dirty slots by window_len/hop, so its row
+is measured against its own tumbling degenerate.
 
 Two measurements per query:
   * sim peak: events/s the simulated 5-node deployment sustains before the
@@ -20,23 +23,27 @@ from repro.streaming import NexmarkConfig, generate_log, make_q0, make_q1_ratio,
 
 def real_dataplane_rate(
     query_name: str, batches: int = 32, epb: int = 2048, sync_every: int = 4,
-    delta_sync: bool = True,
+    delta_sync: bool = True, hop: int | None = None,
 ) -> tuple[float, float, float]:
     """Returns (events/s, measured sync bytes per round per device, and the
     full-replica bytes a full-state round would ship — the delta's comparand,
     a constant of the query's specs)."""
     from repro import compat
     from repro.core import wcrdt as W
-    from repro.launch.stream import MAKERS, build_pipeline
+    from repro.launch.stream import MAKERS, build_pipeline, read_window_range
 
     n_dev = 1
     mesh = compat.make_mesh((n_dev,), ("data",))
     nx = NexmarkConfig(num_partitions=n_dev, num_batches=batches, events_per_batch=epb)
     log = generate_log(nx)
-    query = MAKERS[query_name](n_dev, window_len=1000, num_slots=64)
+    kw = {"hop": hop} if hop else {}
+    query = MAKERS[query_name](n_dev, window_len=1000, num_slots=64, **kw)
     full_bytes = sum(W.state_nbytes(st) for st in query.init_shared())
+    first_window, n_windows = read_window_range(query, batches * nx.batch_span_ms)
     with mesh:
-        pipe = build_pipeline(query, mesh, sync_every=sync_every, delta_sync=delta_sync)
+        pipe = build_pipeline(query, mesh, sync_every=sync_every,
+                              delta_sync=delta_sync, n_windows=n_windows,
+                              first_window=first_window)
         oks, _, sb = pipe(log)
         jax.block_until_ready(oks)
         t0 = time.time()
@@ -81,6 +88,33 @@ def main(quick: bool = False):
             f"events_per_s={rate/1e6:.2f}M;sync_bytes_per_round={delta_bpr:.0f};"
             f"full_sync_bytes_per_round={full_bpr:.0f};sync_reduction_x={ratio:.1f}",
         )
+
+    # sliding-window q5 (EXPERIMENTS.md §Perf iteration D): hop=500 (each
+    # event in 2 windows) vs its tumbling degenerate (hop=1000) — same
+    # state size, so the delta-bytes ratio isolates the overlap cost
+    batches = 16 if quick else 32
+    rows = {}
+    for label, hop in (("sliding_hop500", 500), ("tumbling_hop1000", 1000)):
+        with timer() as tm:
+            rate, delta_bpr, full_bpr = real_dataplane_rate(
+                "q5", batches=batches, hop=hop
+            )
+        rows[label] = (rate, delta_bpr, full_bpr)
+        emit(
+            f"throughput/real_dataplane/q5_{label}",
+            tm.dt * 1e6,
+            f"events_per_s={rate/1e6:.2f}M;sync_bytes_per_round={delta_bpr:.0f};"
+            f"full_sync_bytes_per_round={full_bpr:.0f};"
+            f"sync_reduction_x={full_bpr/max(delta_bpr,1.0):.1f}",
+        )
+    overlap_x = rows["sliding_hop500"][1] / max(rows["tumbling_hop1000"][1], 1.0)
+    emit(
+        "throughput/real_dataplane/q5_overlap_cost",
+        0.0,
+        f"delta_bytes_sliding_over_tumbling={overlap_x:.2f};"
+        f"throughput_ratio="
+        f"{rows['sliding_hop500'][0]/max(rows['tumbling_hop1000'][0],1.0):.2f}",
+    )
 
     # simulated peak capacity, paper's Q4/Q7 comparison
     # per-event shuffle costs calibrated to the paper's measured gaps

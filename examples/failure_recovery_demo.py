@@ -4,24 +4,35 @@ centralized baseline's global stop-restore-replay.
 
 Run: PYTHONPATH=src python examples/failure_recovery_demo.py
 """
-import numpy as np
+import argparse
 
-from repro.runtime import FailureScenario, SimConfig, run_flink, run_holon
-from repro.streaming import make_q7
 
-cfg = SimConfig(num_batches=300)
-q = make_q7(cfg.num_partitions, window_len=cfg.window_len, num_slots=cfg.num_slots)
-scen = FailureScenario.concurrent(t=8000.0)
-print("two nodes fail at t=8s, restart at t=18s\n")
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--batches", type=int, default=300)
+    args = ap.parse_args(argv)
 
-for name, runner in (("HOLON (decentralized)", run_holon), ("FLINK-like (centralized)", run_flink)):
-    c = runner(cfg, q, scen, horizon_ms=cfg.horizon_ms + 20_000)
-    t, lat = c.latency_series()
-    print(f"--- {name} ---")
-    for lo in range(0, 32000, 4000):
-        m = (t >= lo) & (t < lo + 4000)
-        if m.sum():
-            bar = "#" * min(60, int(lat[m].mean() / 50))
-            print(f"  t={lo//1000:3d}-{lo//1000+4:<3d}s avg={lat[m].mean():7.0f} ms {bar}")
-    s = c.latency_stats()
-    print(f"  avg={s['avg']:.0f} ms  p99={s['p99']:.0f} ms\n")
+    from repro.runtime import FailureScenario, SimConfig, run_flink, run_holon
+    from repro.streaming import make_q7
+
+    cfg = SimConfig(num_batches=args.batches)
+    q = make_q7(cfg.num_partitions, window_len=cfg.window_len, num_slots=cfg.num_slots)
+    scen = FailureScenario.concurrent(t=8000.0)
+    print("two nodes fail at t=8s, restart at t=18s\n")
+
+    for name, runner in (("HOLON (decentralized)", run_holon),
+                         ("FLINK-like (centralized)", run_flink)):
+        c = runner(cfg, q, scen, horizon_ms=cfg.horizon_ms + 20_000)
+        t, lat = c.latency_series()
+        print(f"--- {name} ---")
+        for lo in range(0, 32000, 4000):
+            m = (t >= lo) & (t < lo + 4000)
+            if m.sum():
+                bar = "#" * min(60, int(lat[m].mean() / 50))
+                print(f"  t={lo//1000:3d}-{lo//1000+4:<3d}s avg={lat[m].mean():7.0f} ms {bar}")
+        s = c.latency_stats()
+        print(f"  avg={s['avg']:.0f} ms  p99={s['p99']:.0f} ms\n")
+
+
+if __name__ == "__main__":
+    main()

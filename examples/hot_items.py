@@ -1,0 +1,84 @@
+"""Nexmark Q5 "hot items" over an overlapping sliding window — the workload
+tumbling windows cannot express (a burst straddling a window edge is split
+and missed; the hopping window sees it whole).
+
+Runs the same query on BOTH deployment paths and checks them against the
+plain-jnp oracle:
+
+  * the discrete-event Holon runtime (decentralized coordination), and
+  * the shard_map dataplane driver (the TPU-native path, here on CPU),
+
+then prints the hottest auction bucket per sliding window.
+
+Run: PYTHONPATH=src python examples/hot_items.py
+"""
+import argparse
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--batches", type=int, default=100)
+    ap.add_argument("--window-len", type=int, default=1000)
+    ap.add_argument("--hop", type=int, default=500,
+                    help="window start spacing; each event lives in "
+                         "window_len/hop overlapping windows")
+    args = ap.parse_args(argv)
+
+    import jax
+    import numpy as np
+
+    from repro import compat
+    from repro.launch.stream import build_pipeline, read_window_range
+    from repro.runtime import SimConfig, run_holon
+    from repro.streaming import NexmarkConfig, generate_log, make_q5
+
+    cfg = SimConfig(num_nodes=3, num_partitions=6, num_batches=args.batches,
+                    window_len=args.window_len)
+    q = make_q5(cfg.num_partitions, window_len=args.window_len,
+                num_slots=cfg.num_slots, hop=args.hop)
+    a = q.assigner
+    print(f"Q5 hot items: window={a.window_len} hop={a.hop} "
+          f"({a.windows_per_event} windows per event)")
+
+    # --- discrete-event runtime ------------------------------------------
+    consumer = run_holon(cfg, q)
+    nx = NexmarkConfig(num_partitions=cfg.num_partitions, num_batches=cfg.num_batches,
+                       events_per_batch=cfg.events_per_batch,
+                       rate_per_partition=cfg.rate_per_partition, seed=cfg.seed)
+    log = generate_log(nx)
+    wids = sorted({w for (_, w) in consumer.records})
+    oracle = {w: np.asarray(q.oracle(log, w)) for w in wids}  # one eval per wid
+    for (pid, w), rec in sorted(consumer.records.items()):
+        np.testing.assert_array_equal(np.asarray(rec.value), oracle[w])
+    print(f"runtime: {len(consumer.records)} window emissions across "
+          f"{len(wids)} sliding windows — all byte-identical to the oracle")
+    for w in wids[:5]:
+        count, bucket = consumer.records[(0, w)].value
+        print(f"  window [{a.start_ts(w)}, {a.end_ts(w)}): "
+              f"hottest auction bucket {int(bucket)} with {int(count)} bids")
+
+    # --- shard_map dataplane ---------------------------------------------
+    n_dev = len(jax.devices())
+    mesh = compat.make_mesh((n_dev,), ("data",))
+    dnx = NexmarkConfig(num_partitions=n_dev, num_batches=32, events_per_batch=1024)
+    dlog = generate_log(dnx)
+    dq = make_q5(n_dev, window_len=args.window_len, num_slots=64, hop=args.hop)
+    first, n_windows = read_window_range(dq, 32 * dnx.batch_span_ms)
+    with mesh:
+        oks, vals, sync_bytes = build_pipeline(dq, mesh, sync_every=4,
+                                               n_windows=n_windows,
+                                               first_window=first)(dlog)
+    oks, vals = np.asarray(oks), np.asarray(vals)
+    done = int(oks[0].sum())
+    for i in range(n_windows):
+        if oks[0, i]:
+            np.testing.assert_array_equal(
+                vals[0, i], np.asarray(dq.oracle(dlog, first + i))
+            )
+    print(f"dataplane: {done} complete sliding windows on {n_dev} device(s), "
+          f"byte-identical to the oracle; "
+          f"sync bytes/device = {float(np.asarray(sync_bytes).sum()):.0f}")
+
+
+if __name__ == "__main__":
+    main()

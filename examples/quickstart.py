@@ -8,46 +8,55 @@ denominator deterministically.
 
 Run: PYTHONPATH=src python examples/quickstart.py
 """
-import jax.numpy as jnp
-
-from repro.core import wcrdt as W
-from repro.core import wgcounter
+import argparse
 
 P = 3            # partitions
 WINDOW = 10      # tumbling window length (timestamp units)
 
-# totalCount = WCRDT { zero: GCounter }      (Listing 2, line 2)
-spec = wgcounter(window_len=WINDOW, num_slots=8, num_partitions=P)
 
-# each partition processes its own bid stream into its own replica
-replicas, local_counts, events = [], [], {
-    0: [1, 4, 8, 13, 17, 22],
-    1: [2, 5, 11, 14, 21],
-    2: [3, 9, 12, 19, 23],
-}
-for p in range(P):
-    ts = jnp.array(events[p], jnp.int32)
-    s = spec.zero()
-    s = W.insert(spec, s, p, ts, jnp.ones(len(events[p]), bool),
-                 actor=p, amounts=jnp.ones(len(events[p])))          # insert(1, ts)
-    s = W.increment_watermark(spec, s, p, int(ts.max()))             # incrementWatermark
-    replicas.append(s)
-    local_counts.append({w: sum(1 for t in events[p] if w*WINDOW <= t < (w+1)*WINDOW)
-                         for w in range(3)})
+def main(argv=None):
+    argparse.ArgumentParser(description=__doc__).parse_args(argv)
+    import jax.numpy as jnp
 
-# background sync: lattice merges in ANY order converge (CRDT!)
-merged = replicas[0]
-for s in replicas[1:]:
-    merged = W.merge(spec, merged, s)
+    from repro.core import wcrdt as W
+    from repro.core import wgcounter
 
-gwm = int(W.global_watermark(spec, merged))
-print(f"global watermark = {gwm}")
-for w in range(3):
-    total, ok = W.window_value(spec, merged, w)                      # getWindowValue
-    if not bool(ok):
-        print(f"window {w}: not complete yet (safe mode would block)")
-        continue
-    print(f"window {w}: global bids = {float(total):.0f}")
+    # totalCount = WCRDT { zero: GCounter }      (Listing 2, line 2)
+    spec = wgcounter(window_len=WINDOW, num_slots=8, num_partitions=P)
+
+    # each partition processes its own bid stream into its own replica
+    replicas, local_counts, events = [], [], {
+        0: [1, 4, 8, 13, 17, 22],
+        1: [2, 5, 11, 14, 21],
+        2: [3, 9, 12, 19, 23],
+    }
     for p in range(P):
-        ratio = local_counts[p][w] / float(total)
-        print(f"  partition {p}: localCount/total = {ratio:.3f}")    # emit <ratio>
+        ts = jnp.array(events[p], jnp.int32)
+        s = spec.zero()
+        s = W.insert(spec, s, p, ts, jnp.ones(len(events[p]), bool),
+                     actor=p, amounts=jnp.ones(len(events[p])))      # insert(1, ts)
+        s = W.increment_watermark(spec, s, p, int(ts.max()))         # incrementWatermark
+        replicas.append(s)
+        local_counts.append({w: sum(1 for t in events[p] if w*WINDOW <= t < (w+1)*WINDOW)
+                             for w in range(3)})
+
+    # background sync: lattice merges in ANY order converge (CRDT!)
+    merged = replicas[0]
+    for s in replicas[1:]:
+        merged = W.merge(spec, merged, s)
+
+    gwm = int(W.global_watermark(spec, merged))
+    print(f"global watermark = {gwm}")
+    for w in range(3):
+        total, ok = W.window_value(spec, merged, w)                  # getWindowValue
+        if not bool(ok):
+            print(f"window {w}: not complete yet (safe mode would block)")
+            continue
+        print(f"window {w}: global bids = {float(total):.0f}")
+        for p in range(P):
+            ratio = local_counts[p][w] / float(total)
+            print(f"  partition {p}: localCount/total = {ratio:.3f}")  # emit <ratio>
+
+
+if __name__ == "__main__":
+    main()

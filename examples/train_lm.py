@@ -7,14 +7,24 @@ Quick demo (tiny model, ~2 min):
 Full run (100M params, a few hundred steps — hours on CPU, minutes on TPU):
     PYTHONPATH=src python examples/train_lm.py --full
 """
-import sys
+import argparse
 
-sys.argv = [sys.argv[0]] + (
-    ["--preset", "100m", "--steps", "300", "--batch", "8", "--seq", "512"]
-    if "--full" in sys.argv
-    else ["--preset", "tiny", "--steps", "40", "--crash-at", "25",
-          "--ckpt-every", "10", "--ckpt-dir", "/tmp/repro_example_ckpt"]
-)
-from repro.launch.train import main  # noqa: E402
 
-main()
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true",
+                    help="100M-param preset instead of the tiny demo")
+    args = ap.parse_args(argv)
+
+    from repro.launch.train import main as train_main
+
+    train_main(
+        ["--preset", "100m", "--steps", "300", "--batch", "8", "--seq", "512"]
+        if args.full
+        else ["--preset", "tiny", "--steps", "40", "--crash-at", "25",
+              "--ckpt-every", "10", "--ckpt-dir", "/tmp/repro_example_ckpt"]
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+#!/usr/bin/env python
+"""Examples smoke gate (tier-1, run by scripts/test.sh).
+
+Every file in examples/ must (1) import cleanly as a module — no work at
+module scope, so stale imports fail fast without running a demo — and
+(2) answer ``--help`` with a zero exit.  This is what keeps the examples
+from silently rotting when the API underneath them moves (the drift this
+gate was added for: ``launch/stream.py`` grew queries the examples and
+benchmarks import).
+
+Exit 0 when every example passes; exit 1 with a listing otherwise.
+"""
+from __future__ import annotations
+
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+EXAMPLES = sorted((ROOT / "examples").glob("*.py"))
+
+IMPORT_SNIPPET = """
+import importlib.util, sys
+spec = importlib.util.spec_from_file_location({name!r}, {path!r})
+mod = importlib.util.module_from_spec(spec)
+spec.loader.exec_module(mod)
+assert callable(getattr(mod, "main", None)), \
+    {name!r} + ": examples must expose a main() entry point"
+"""
+
+
+def main() -> int:
+    env = {"PYTHONPATH": str(ROOT / "src")}
+    import os
+
+    env = {**os.environ, **env}
+    failures: list[str] = []
+    for py in EXAMPLES:
+        checks = (
+            ("import", [sys.executable, "-c",
+                        IMPORT_SNIPPET.format(name=py.stem, path=str(py))]),
+            ("--help", [sys.executable, str(py), "--help"]),
+        )
+        for label, cmd in checks:
+            try:
+                r = subprocess.run(
+                    cmd, capture_output=True, text=True, timeout=120, env=env,
+                )
+            except subprocess.TimeoutExpired:
+                failures.append(
+                    f"{py.name} [{label}]: timed out after 120s "
+                    "(module-scope work in an example?)"
+                )
+                continue
+            if r.returncode != 0:
+                tail = (r.stderr or r.stdout).strip().splitlines()[-3:]
+                failures.append(f"{py.name} [{label}]: " + " | ".join(tail))
+    if failures:
+        print("examples_smoke: FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print(f"examples_smoke: OK ({len(EXAMPLES)} examples import + --help)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -13,6 +13,8 @@ tier1() {
   # docs gate: every `docs/... §X` / `DESIGN.md §X` cited in a docstring
   # must exist, and the suite must at least collect cleanly
   python scripts/check_docs.py
+  # examples gate: every examples/*.py imports cleanly and answers --help
+  python scripts/examples_smoke.py
   python -m pytest --collect-only -q >/dev/null
   python -m pytest -x -q -m "not slow and not multidevice" "$@"
 }

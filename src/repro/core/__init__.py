@@ -22,6 +22,13 @@ from repro.core.crdt import (
     PNCounter,
     TopK,
 )
+from repro.core.window import (
+    Hopping,
+    Tumbling,
+    WindowAssigner,
+    as_assigner,
+    expand_events,
+)
 from repro.core.wcrdt import (
     WSpec,
     WState,

@@ -40,6 +40,7 @@ from jax import lax
 
 from repro.core import crdt as crdts
 from repro.core.lattice import Reduce, join, join_stacked, lattice_dataclass
+from repro.core.window import Hopping, Tumbling, WindowAssigner, expand_events
 
 NO_WID = jnp.int32(-1)
 ERR_LATE = 0  # events older than the partition's own watermark (paper: error)
@@ -105,7 +106,7 @@ def _merge_wstate(a: WState, b: WState) -> WState:
 class WSpec:
     """Static spec of a Windowed CRDT (hashable; safe as a jit static arg)."""
 
-    window_len: int  # window length in timestamp units (tumbling)
+    window_len: int  # window length in timestamp units
     num_slots: int  # ring size W (must exceed max watermark lag, in windows)
     num_partitions: int  # P — progress map size
     zero_windows: Callable[[], Any]  # () -> CRDT pytree with [W] leading axis
@@ -115,9 +116,32 @@ class WSpec:
     # insert() computes the batch's lowest window id and the fold only visits
     # this many window offsets (events beyond are dropped + counted ERR_RING).
     max_active_windows: int | None = None
+    # Window shape (DESIGN.md §8): Tumbling reproduces the paper's
+    # ``ts // window_len`` bit-for-bit; Hopping(window_len, hop) maps each
+    # event into window_len // hop overlapping windows.  None -> Tumbling.
+    assigner: WindowAssigner | None = None
+
+    def __post_init__(self):
+        if self.assigner is None:
+            object.__setattr__(self, "assigner", Tumbling(self.window_len))
+        elif self.assigner.window_len != self.window_len:
+            raise ValueError(
+                f"assigner window_len {self.assigner.window_len} != spec "
+                f"window_len {self.window_len}"
+            )
+        if self.assigner.windows_per_event > self.num_slots:
+            # one event's K concurrent windows can never all be resident:
+            # every fold would evict incomplete windows and reads would
+            # return ok=False with no hint why — reject up front
+            raise ValueError(
+                f"assigner spans {self.assigner.windows_per_event} concurrent "
+                f"windows per event but the ring has only {self.num_slots} "
+                "slots; raise num_slots or the hop"
+            )
 
     def window_of(self, ts: jax.Array) -> jax.Array:
-        return ts.astype(jnp.int32) // jnp.int32(self.window_len)
+        """Newest window containing ``ts`` (the only one, under Tumbling)."""
+        return self.assigner.window_of(ts)
 
     def zero(self) -> WState:
         return WState(
@@ -134,6 +158,14 @@ class WSpec:
 # ---------------------------------------------------------------------------
 
 
+def _expand_payload(x, B: int, K: int):
+    """Repeat an event-aligned ``[B, ...]`` payload into ``[B*K, ...]`` lanes;
+    scalars (e.g. ``actor=partition``) pass through untouched."""
+    if getattr(x, "ndim", 0) >= 1 and x.shape[0] == B:
+        return jnp.repeat(jnp.asarray(x), K, axis=0)
+    return x
+
+
 def insert(
     spec: WSpec, state: WState, partition, ts: jax.Array, mask: jax.Array,
     batch_idx=None, **inputs
@@ -146,6 +178,12 @@ def insert(
     slot's CRDT to zero first; events for already-evicted windows are dropped
     and counted.
 
+    Under an overlapping assigner (DESIGN.md §8) each event multi-emits into
+    its ``windows_per_event`` windows: the batch expands into ``[B*K]`` lanes
+    (window ids + repeated payloads) and the same vectorized scatter folds
+    them all — ERR_LATE stays per *event*, ERR_RING counts dropped
+    (event, window) assignments.  Tumbling keeps the single-lane graph.
+
     ``batch_idx`` (optional): this batch's index in the partition's input log.
     When given, the fold is a no-op unless ``batch_idx >= folded[partition]``
     — replay-idempotence for exactly-once recovery (see WState.folded).
@@ -155,13 +193,21 @@ def insert(
     if batch_idx is not None:
         fresh = jnp.asarray(batch_idx, jnp.int32) >= state.folded[partition]
         mask = mask & fresh
-    wid = spec.window_of(ts)
-    slot = wid % W
 
     # Algorithm 1 line 5: ts < progress[self] is an error -> count as late.
+    # Per-event (before multi-window expansion) so each event counts once.
     late = mask & (ts < state.progress[partition])
     mask = mask & ~late
     n_late = jnp.sum(late).astype(jnp.int32)
+
+    K = spec.assigner.windows_per_event
+    if K == 1:
+        wid = spec.assigner.window_of(ts)
+    else:
+        B = ts.shape[0]
+        wid, mask = expand_events(spec.assigner, ts, mask)
+        inputs = {k: _expand_payload(v, B, K) for k, v in inputs.items()}
+    slot = wid % W
 
     # Newest incoming window id per slot (masked lanes contribute NO_WID).
     inc_wid = jnp.where(mask, wid, NO_WID)
@@ -174,7 +220,7 @@ def insert(
     # Reset slots whose tenant window advances.
     advancing = new_slot_wid > state.slot_wid
     # eviction-safety diagnostic: old tenant not yet complete?
-    gwm_wid = spec.window_of(global_watermark(spec, state))
+    gwm_wid = spec.assigner.first_dirty_wid(global_watermark(spec, state))
     evict_bad = advancing & (state.slot_wid >= 0) & (state.slot_wid >= gwm_wid)
     zeros = spec.zero_windows()
 
@@ -225,10 +271,10 @@ def global_watermark(spec: WSpec, state: WState) -> jax.Array:
 
 
 def window_complete(spec: WSpec, state: WState, wid) -> jax.Array:
-    """A window is complete once the global watermark passes its end."""
+    """A window is complete once the global watermark passes its end (the
+    assigner-provided extent — ``(wid+1)*window_len`` under Tumbling)."""
     wid = jnp.asarray(wid, jnp.int32)
-    end_ts = (wid + 1) * jnp.int32(spec.window_len)
-    return global_watermark(spec, state) >= end_ts
+    return global_watermark(spec, state) >= spec.assigner.end_ts(wid)
 
 
 def window_value(spec: WSpec, state: WState, wid):
@@ -329,15 +375,18 @@ def delta_since(
     Dirty rule: events folded after the baseline have ts >= that partition's
     BASELINE watermark (older ones are late-dropped), so a slot is dirty iff
     its tenant window contains/exceeds the oldest baseline watermark among
-    partitions whose batch frontier advanced.  Conservative and exact for
-    in-order streams.
+    partitions whose batch frontier advanced — i.e. its tenant wid reaches
+    ``assigner.first_dirty_wid(frontier)``, the smallest window any post-
+    baseline event can land in (docs/protocol.md §2; under Tumbling this is
+    the original ``frontier // window_len``).  Conservative and exact for
+    in-order streams, overlapping windows included.
     """
     advanced = state.folded > baseline_folded
     any_adv = jnp.any(advanced)
     frontier_ts = jnp.min(
         jnp.where(advanced, baseline_progress, jnp.int32(2**31 - 1))
     )
-    dirty_wid = spec.window_of(jnp.maximum(frontier_ts, 0))
+    dirty_wid = spec.assigner.first_dirty_wid(jnp.maximum(frontier_ts, 0))
     dirty = (state.slot_wid >= dirty_wid) & any_adv
 
     zeros = spec.zero_windows()
@@ -457,10 +506,12 @@ def delta_axis_join(
 
 
 def wgcounter(
-    window_len: int, num_slots: int, num_partitions: int, key_shape=(), dtype=jnp.float32
+    window_len: int, num_slots: int, num_partitions: int, key_shape=(), dtype=jnp.float32,
+    assigner: WindowAssigner | None = None,
 ) -> WSpec:
     return WSpec(
         window_len=window_len,
+        assigner=assigner,
         num_slots=num_slots,
         num_partitions=num_partitions,
         zero_windows=partial(
@@ -474,10 +525,12 @@ def wgcounter(
 
 
 def wpncounter(
-    window_len: int, num_slots: int, num_partitions: int, key_shape=(), dtype=jnp.float32
+    window_len: int, num_slots: int, num_partitions: int, key_shape=(), dtype=jnp.float32,
+    assigner: WindowAssigner | None = None,
 ) -> WSpec:
     return WSpec(
         window_len=window_len,
+        assigner=assigner,
         num_slots=num_slots,
         num_partitions=num_partitions,
         zero_windows=partial(
@@ -491,10 +544,12 @@ def wpncounter(
 
 
 def wmaxreg(
-    window_len: int, num_slots: int, num_partitions: int, key_shape=(), dtype=jnp.float32
+    window_len: int, num_slots: int, num_partitions: int, key_shape=(), dtype=jnp.float32,
+    assigner: WindowAssigner | None = None,
 ) -> WSpec:
     return WSpec(
         window_len=window_len,
+        assigner=assigner,
         num_slots=num_slots,
         num_partitions=num_partitions,
         zero_windows=partial(crdts.MaxReg.zero_windows, num_slots, key_shape, dtype),
@@ -504,10 +559,12 @@ def wmaxreg(
 
 
 def wminreg(
-    window_len: int, num_slots: int, num_partitions: int, key_shape=(), dtype=jnp.float32
+    window_len: int, num_slots: int, num_partitions: int, key_shape=(), dtype=jnp.float32,
+    assigner: WindowAssigner | None = None,
 ) -> WSpec:
     return WSpec(
         window_len=window_len,
+        assigner=assigner,
         num_slots=num_slots,
         num_partitions=num_partitions,
         zero_windows=partial(crdts.MinReg.zero_windows, num_slots, key_shape, dtype),
@@ -519,10 +576,19 @@ def wminreg(
 def wtopk(
     window_len: int, num_slots: int, num_partitions: int, k: int,
     max_active_windows: int | None = 8,
+    assigner: WindowAssigner | None = None,
 ) -> WSpec:
     aw = max_active_windows
+    if aw is not None and aw > num_slots:
+        # TopK's fast fold scatters one row per active window offset; more
+        # offsets than ring slots would alias (wid % W) and silently drop
+        # folds — reject instead (use num_slots, or None for the slow path)
+        raise ValueError(
+            f"max_active_windows={aw} exceeds num_slots={num_slots}"
+        )
     return WSpec(
         window_len=window_len,
+        assigner=assigner,
         num_slots=num_slots,
         num_partitions=num_partitions,
         zero_windows=partial(crdts.TopK.zero_windows, num_slots, k),
@@ -536,9 +602,13 @@ def wtopk(
     )
 
 
-def wgset(window_len: int, num_slots: int, num_partitions: int, domain: int) -> WSpec:
+def wgset(
+    window_len: int, num_slots: int, num_partitions: int, domain: int,
+    assigner: WindowAssigner | None = None,
+) -> WSpec:
     return WSpec(
         window_len=window_len,
+        assigner=assigner,
         num_slots=num_slots,
         num_partitions=num_partitions,
         zero_windows=partial(crdts.GSet.zero_windows, num_slots, domain),

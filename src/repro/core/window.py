@@ -1,0 +1,173 @@
+"""First-class window assigners (DESIGN.md §8).
+
+The paper defines Windowed CRDTs over tumbling windows, where window
+membership is the integer division ``ts // window_len``.  This module lifts
+that implicit rule into a small, hashable abstraction so the same WCRDT
+machinery (ring slots, watermark-gated reads, delta sync) serves overlapping
+sliding/hopping windows — the hard case for scalable multiway aggregation
+(Gulisano et al.; see PAPERS.md) and what Nexmark Q5 "hot items" needs.
+
+An assigner answers three questions, each a pure function of static config:
+
+* ``assign(ts)``   — which window ids does an event at ``ts`` belong to?
+                     Up to ``windows_per_event`` ids (K), plus a validity
+                     mask (early events near the stream start belong to
+                     fewer than K windows).
+* ``end_ts(wid)``  — when does window ``wid`` close?  Completion is
+                     ``gwm >= end_ts(wid)``, exactly the paper's rule with
+                     the tumbling extent generalized.
+* ``first_dirty_wid(frontier_ts)`` — the smallest window id any event with
+                     ``ts >= frontier_ts`` can land in.  This is the delta
+                     dirty rule's generalization (docs/protocol.md §2): a
+                     ring slot is dirty iff its tenant wid reaches this.
+
+Every per-window aggregate remains a join-semilattice, so determinism and
+convergence carry over unchanged (Preguiça; see PAPERS.md): overlap only
+multiplies *assignment*, never the merge algebra.  All methods are written
+with plain operators so they work identically on Python ints (runtime
+emission loops) and traced jnp arrays (the jitted dataplane); jnp floor
+division matches Python's for the negative intermediate in
+``first_dirty_wid``.
+
+``Tumbling(window_len)`` is ``Hopping(window_len, hop=window_len)`` (K=1)
+and reproduces the pre-assigner behavior bit-for-bit: ``insert`` keeps the
+single-lane fold graph, and every formula below degenerates to the old
+``ts // window_len`` arithmetic.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Hopping:
+    """Overlapping windows of length ``window_len`` starting every ``hop``.
+
+    Window ``w`` covers ``[w*hop, w*hop + window_len)``; each event belongs
+    to ``window_len // hop`` consecutive windows (fewer near the stream
+    start, where some of them would begin before t=0).  ``hop`` must divide
+    ``window_len`` so that K is static — the fold expands each event into a
+    fixed K lanes (see ``expand_events``), which is what keeps the scatter
+    vectorized and jit-able.
+    """
+
+    window_len: int
+    hop: int
+
+    def __post_init__(self):
+        if self.hop <= 0 or self.window_len <= 0:
+            raise ValueError(f"window_len and hop must be positive: {self}")
+        if self.hop > self.window_len:
+            raise ValueError(f"hop must not exceed window_len: {self}")
+        if self.window_len % self.hop:
+            raise ValueError(f"hop must divide window_len: {self}")
+
+    # ---- static shape ------------------------------------------------------
+    @property
+    def windows_per_event(self) -> int:
+        """K: the number of windows an (interior) event belongs to."""
+        return self.window_len // self.hop
+
+    # ---- assignment --------------------------------------------------------
+    def assign(self, ts) -> tuple[jax.Array, jax.Array]:
+        """Window ids of each event: ``(wids, valid)`` with trailing ``[K]``.
+
+        ``wids[..., 0]`` is the newest window containing the event (the one
+        the tumbling rule would pick when K=1); older overlapping windows
+        follow.  ``valid`` masks ids that would start before t=0.
+        """
+        ts = jnp.asarray(ts).astype(jnp.int32)
+        hi = ts // jnp.int32(self.hop)
+        offs = jnp.arange(self.windows_per_event, dtype=jnp.int32)
+        wids = hi[..., None] - offs
+        return wids, wids >= 0
+
+    def window_of(self, ts):
+        """The newest window containing ``ts`` (== the tumbling wid at K=1)."""
+        return ts // self.hop if isinstance(ts, int) else (
+            jnp.asarray(ts).astype(jnp.int32) // jnp.int32(self.hop)
+        )
+
+    def contains(self, wid, ts):
+        """Membership predicate — the oracle-side mirror of ``assign``."""
+        start = wid * self.hop
+        return (ts >= start) & (ts < start + self.window_len)
+
+    # ---- extents -----------------------------------------------------------
+    def start_ts(self, wid):
+        return wid * self.hop
+
+    def end_ts(self, wid):
+        return wid * self.hop + self.window_len
+
+    def complete(self, wid, gwm):
+        """Paper §3.3 read gate with the window extent generalized: final
+        (and identical on every replica) once the global watermark passes
+        the window's end."""
+        return gwm >= self.end_ts(wid)
+
+    def first_dirty_wid(self, frontier_ts):
+        """Smallest wid any event with ``ts >= frontier_ts`` can land in.
+
+        A window receives an event iff it contains it, i.e. iff its end
+        lies strictly beyond the event's ts — so the candidate set is
+        ``{w : end_ts(w) > frontier_ts}``, whose minimum is
+        ``floor((frontier_ts - window_len) / hop) + 1`` (floor division,
+        exact for the negative intermediate near the stream start; clamped
+        at 0).  For tumbling this is ``frontier_ts // window_len`` — the
+        original delta dirty rule (docs/protocol.md §2)."""
+        w = (frontier_ts - self.window_len) // self.hop + 1
+        if isinstance(w, jax.Array):
+            return jnp.maximum(w, 0)
+        return max(int(w), 0)
+
+
+@dataclasses.dataclass(frozen=True)
+class Tumbling(Hopping):
+    """Non-overlapping windows — ``Hopping(window_len, window_len)``; K=1.
+
+    Construct as ``Tumbling(window_len)``; the hop is pinned to the window
+    length so the assignment degenerates to ``ts // window_len`` and the
+    fold keeps today's single-lane graph bit-for-bit."""
+
+    hop: int = 0  # sentinel; pinned to window_len in __post_init__
+
+    def __post_init__(self):
+        if self.hop == 0:
+            object.__setattr__(self, "hop", self.window_len)
+        if self.hop != self.window_len:
+            raise ValueError("Tumbling windows have hop == window_len; "
+                             f"got {self} — use Hopping for overlap")
+        super().__post_init__()
+
+
+# Anything quacking like Hopping (the structural protocol WSpec carries).
+WindowAssigner = Hopping
+
+
+def as_assigner(window_len: int, hop: int | None = None) -> WindowAssigner:
+    """Normalize a (window_len, hop) pair: ``hop in (None, 0, window_len)``
+    means tumbling; anything else is a hopping/sliding window."""
+    if hop is None or hop == 0 or hop == window_len:
+        return Tumbling(window_len)
+    return Hopping(window_len, hop)
+
+
+def expand_events(
+    assigner: WindowAssigner, ts: jax.Array, mask: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Expand ``[B]`` events into the ``[B*K]`` multi-emit lane stream.
+
+    Lane ``b*K + k`` carries event ``b``'s k-th (newest-first) window id;
+    lanes whose window starts before t=0 are masked out.  Payload arrays
+    follow with ``jnp.repeat(x, K)`` — the fold kernels (kernels/window_agg)
+    are agnostic to whether lanes came from distinct events or one event
+    multi-emitted, which is the whole trick: overlap costs K× lanes, not a
+    new kernel."""
+    wids, in_win = assigner.assign(ts)
+    wid_flat = wids.reshape(-1)
+    mask_flat = (mask[..., None] & in_win).reshape(-1)
+    return wid_flat, mask_flat

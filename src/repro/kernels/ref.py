@@ -15,7 +15,12 @@ def window_agg_ref(
     C: int = 1,
     init: jax.Array | None = None,  # [W] or [W, C] running state
 ):
-    """Fold a batch of events into per-window (optionally per-key) aggregates."""
+    """Fold a batch of events into per-window (optionally per-key) aggregates.
+
+    Lane-count agnostic: ``B`` may be the raw batch or the ``B*K`` expanded
+    multi-emit stream of an overlapping window assigner
+    (``core.window.expand_events``) — out-of-window expansion lanes arrive
+    with ``mask=False`` and fold to the op's neutral element."""
     neutral = {"sum": 0.0, "count": 0.0, "max": -jnp.inf, "min": jnp.inf}[op]
     v = vals.astype(jnp.float32)
     if op == "count":

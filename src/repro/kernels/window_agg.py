@@ -98,9 +98,24 @@ def window_agg_pallas(
     block_b: int = 256,
     interpret: bool = False,
 ) -> jax.Array:
-    """Returns [W] (unkeyed) or [W, C] (keyed) fp32 aggregates."""
+    """Returns [W] (unkeyed) or [W, C] (keyed) fp32 aggregates.
+
+    Accepts any event-lane count ``B`` — in particular the ``B*K`` expanded
+    multi-emit stream of an overlapping window assigner (DESIGN.md §8),
+    which is rarely a block multiple.  Lanes are padded up to ``block_b``
+    with ``mask=False`` (inert under every op's neutral element), so the
+    fold is agnostic to whether lanes came from distinct events or one
+    event multi-emitted into several windows.
+    """
     B = vals.shape[0]
-    assert B % block_b == 0, (B, block_b)
+    pad = (-B) % block_b
+    if pad:
+        vals = jnp.pad(vals, (0, pad))
+        slots = jnp.pad(slots, (0, pad))  # slot 0; dead under mask=False
+        mask = jnp.pad(mask, (0, pad))  # False
+        if keys is not None:
+            keys = jnp.pad(keys, (0, pad))
+        B += pad
     grid = (B // block_b,)
     ev_spec = pl.BlockSpec((block_b,), lambda i: (i,))
     if keys is None:

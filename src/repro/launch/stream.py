@@ -36,21 +36,42 @@ from repro import compat
 from repro.core import wcrdt as W
 from repro.streaming.events import EventBatch
 from repro.streaming.generator import NexmarkConfig, generate_log
-from repro.streaming.queries import Query, make_q1_ratio, make_q4, make_q7
+from repro.streaming.queries import (
+    Query,
+    make_q0,
+    make_q1_ratio,
+    make_q4,
+    make_q5,
+    make_q7,
+)
 
-MAKERS = {"q4": make_q4, "q7": make_q7, "q1_ratio": make_q1_ratio}
+# every query the benchmarks import is runnable on the dataplane, including
+# the shared-state-free q0 (sync rounds no-op) and the sliding-window q5
+MAKERS = {
+    "q0": make_q0,
+    "q1_ratio": make_q1_ratio,
+    "q4": make_q4,
+    "q5": make_q5,
+    "q7": make_q7,
+}
 
 
-def build_pipeline(query: Query, mesh, sync_every: int, delta_sync: bool = True):
+def build_pipeline(
+    query: Query, mesh, sync_every: int, delta_sync: bool = True,
+    n_windows: int = 64, first_window: int = 0,
+):
     """Returns a jitted fn: (log slice per device) -> (oks, vals, sync_bytes).
 
     Scans batches; every ``sync_every`` folds runs one background-sync
     exchange (delta-state by default, full-state all-reduce with
-    ``delta_sync=False``); finally reads every completed window.
-    ``sync_bytes`` is each device's total modeled sync traffic in bytes.
+    ``delta_sync=False``); finally reads window ids ``first_window ..
+    first_window + n_windows`` (overlapping assigners close a window every
+    ``hop``, not every ``window_len``, and long runs evict the oldest ids
+    from the ring — size and offset via ``read_window_range``).  A query
+    with no shared state (q0) simply skips the exchange: the per-spec loop
+    is empty and ``sync_bytes`` stays 0.  ``sync_bytes`` is each device's
+    total modeled sync traffic in bytes.
     """
-
-    n_windows = 64
 
     def node_fn(log: EventBatch):
         p = jax.lax.axis_index("data")
@@ -103,7 +124,7 @@ def build_pipeline(query: Query, mesh, sync_every: int, delta_sync: bool = True)
             v, ok = query.read(shared, local, w)
             return jnp.where(ok, 1.0, 0.0), v
 
-        oks, vals = jax.vmap(read)(jnp.arange(n_windows))
+        oks, vals = jax.vmap(read)(first_window + jnp.arange(n_windows))
         return oks[None], vals[None], sync_bytes[None]
 
     log_specs = jax.tree.map(lambda _: P("data"), EventBatch(*([0] * 7)))
@@ -117,12 +138,38 @@ def build_pipeline(query: Query, mesh, sync_every: int, delta_sync: bool = True)
     )
 
 
+def read_window_range(query: Query, horizon_ts: float) -> tuple[int, int]:
+    """``(first_wid, n_windows)`` worth reading after a ``horizon_ts`` run:
+    the LAST ring-residency-capped window ids closing within the horizon —
+    on long runs the earliest ids have been evicted from the ring and would
+    read not-ok, so the range ends at the horizon rather than starting at 0.
+
+    Residency is anchored at the NEWEST assigned wid, which under overlap
+    runs ``K - 1`` ahead of the newest *complete* one — the usable span is
+    ``num_slots - (K - 1)`` complete ids plus the one still-open id at the
+    top of the range (reads not-ok; kept so the count is horizon-exact).
+    """
+    a = query.assigner
+    closed = int(a.first_dirty_wid(horizon_ts))
+    # residency is bounded by the SMALLEST ring a read touches — shared
+    # AND local (q1_ratio-style reads consult both)
+    rings = [st.num_slots for st in query.shared_specs]
+    if query.local_spec is not None:
+        rings.append(query.local_spec.num_slots)
+    cap = min(rings) if rings else 64
+    n = max(1, min(closed + 1, cap - (a.windows_per_event - 1)))
+    return max(0, closed + 1 - n), n
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--query", default="q7", choices=list(MAKERS))
+    ap.add_argument("--query", default="q7", choices=sorted(MAKERS))
     ap.add_argument("--batches", type=int, default=64)
     ap.add_argument("--events-per-batch", type=int, default=1024)
     ap.add_argument("--window-len", type=int, default=1000)
+    ap.add_argument("--hop", type=int, default=0,
+                    help="hopping-window hop; 0 = the query's default "
+                         "(tumbling, except q5 which slides by window/2)")
     ap.add_argument("--sync-every", type=int, default=4)
     ap.add_argument("--full-sync", action="store_true",
                     help="full-state lattice all-reduce instead of delta sync")
@@ -138,11 +185,15 @@ def main(argv=None):
         events_per_batch=args.events_per_batch,
     )
     log = generate_log(nx)
-    query = MAKERS[args.query](n_dev, window_len=args.window_len, num_slots=64)
+    kw = {"hop": args.hop} if args.hop else {}
+    query = MAKERS[args.query](n_dev, window_len=args.window_len, num_slots=64, **kw)
+    horizon_ts = args.batches * nx.batch_span_ms
+    first_window, n_windows = read_window_range(query, horizon_ts)
 
     with mesh:
         pipe = build_pipeline(query, mesh, args.sync_every,
-                              delta_sync=not args.full_sync)
+                              delta_sync=not args.full_sync,
+                              n_windows=n_windows, first_window=first_window)
         oks, vals, sb = pipe(log)  # compile+run
         jax.block_until_ready(oks)
         t0 = time.time()
@@ -154,9 +205,11 @@ def main(argv=None):
     done = int(np.asarray(oks).sum()) // n_dev
     rounds = max(args.batches // args.sync_every, 1)
     sync_per_round = float(np.asarray(sb).mean()) / rounds
+    a = query.assigner
     print(
         f"devices={n_dev} events={total_events} wall={dt*1e3:.1f}ms "
-        f"throughput={total_events/dt/1e6:.2f}M ev/s complete_windows={done} "
+        f"throughput={total_events/dt/1e6:.2f}M ev/s "
+        f"window={a.window_len}/hop={a.hop} complete_windows={done} "
         f"sync={'full' if args.full_sync else 'delta'} "
         f"sync_bytes_per_round={sync_per_round:.0f}"
     )

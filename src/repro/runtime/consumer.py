@@ -26,8 +26,11 @@ class WindowRecord:
 
 
 class Consumer:
-    def __init__(self, window_len: float):
+    def __init__(self, window_len: float, assigner=None):
+        # ``assigner`` (core.window.WindowAssigner) supplies window extents;
+        # None keeps the tumbling arithmetic for legacy callers.
         self.window_len = window_len
+        self.assigner = assigner
         self.records: dict[tuple[int, int], WindowRecord] = {}
         self.events_consumed: list[tuple[float, int]] = []  # (time, count)
         self.duplicates = 0
@@ -46,7 +49,7 @@ class Consumer:
             self.records[key].duplicates += 1
             self.duplicates += 1
             return False
-        close_ts = (window + 1) * self.window_len
+        close_ts = self._close_ts(window)
         self.records[key] = WindowRecord(
             partition=partition,
             window=window,
@@ -59,6 +62,12 @@ class Consumer:
     def count_events(self, t: float, n: int) -> None:
         self.events_consumed.append((t, n))
 
+    def _close_ts(self, window: int) -> float:
+        """Event-time close of a window — the latency zero point."""
+        if self.assigner is not None:
+            return float(self.assigner.end_ts(window))
+        return (window + 1) * self.window_len
+
     # -- metrics -------------------------------------------------------------
     def latencies(self) -> np.ndarray:
         return np.array([r.latency for r in self.records.values()], dtype=np.float64)
@@ -66,7 +75,7 @@ class Consumer:
     def latency_series(self) -> tuple[np.ndarray, np.ndarray]:
         """(window close time, latency) sorted by time — Fig 6 style."""
         recs = sorted(self.records.values(), key=lambda r: (r.window, r.partition))
-        t = np.array([(r.window + 1) * self.window_len for r in recs])
+        t = np.array([self._close_ts(r.window) for r in recs])
         lat = np.array([r.latency for r in recs])
         return t, lat
 

@@ -53,7 +53,7 @@ class FlinkHarness:
         # logs keep the A/B cost models apples-to-apples
         self.valid_frac = np.asarray(self.log.valid, np.float64).mean(axis=-1)
         self.sim = Sim()
-        self.consumer = Consumer(window_len=cfg.window_len)
+        self.consumer = Consumer(window_len=cfg.window_len, assigner=query.assigner)
         self.tree_depth = max(
             1, math.ceil(math.log(max(cfg.num_partitions, 2), cfg.flink_tree_fanin))
         )
@@ -90,9 +90,11 @@ class FlinkHarness:
         self.consumer.count_events(
             self.sim.now, int(round(frac * cfg.events_per_batch))
         )
-        # local watermark after this batch = end of batch span
+        # local watermark after this batch = end of batch span; a leaf
+        # forwards every window whose assigner-provided end it has passed
+        # (wid < first_dirty_wid(wm) — under tumbling, wm // window_len)
         wm = (b + 1) * cfg.batch_span_ms
-        closed = int(wm // cfg.window_len)
+        closed = int(self.query.assigner.first_dirty_wid(wm))
         for wid in range(closed):
             if (wid, pid) not in self.forwarded:
                 self.forwarded.add((wid, pid))

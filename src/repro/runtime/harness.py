@@ -309,12 +309,17 @@ class HolonNode:
         return max(cfg.batch_proc_ms * frac, cfg.batch_proc_ms / cfg.events_per_batch)
 
     def _emit_ready(self, pid: int):
-        """Emit every window completed under the current global watermark."""
+        """Emit every window completed under the current global watermark.
+
+        Iterates assigner-complete windows (``gwm >= end_ts(wid)``): window
+        ends are monotone in wid for any assigner, so completeness is
+        prefix-closed and ``emitted_upto`` advances exactly as for tumbling
+        — overlapping windows emit in wid order, each deduplicated by the
+        consumer under crash/restart/reconfigure like any other window."""
         q = self.h.query
         m = self.meta[pid]
         gwm = int(q.global_watermark(self.replica, self.locals[pid]))
-        # window w is complete iff gwm >= (w+1)*window_len
-        while gwm >= (m.emitted_upto + 1) * q.window_len:
+        while q.assigner.complete(m.emitted_upto, gwm):
             wid = m.emitted_upto
             val, ok = self.h.read_fn(self.replica, self.locals[pid], wid)
             if not bool(ok):
@@ -485,7 +490,7 @@ class HolonHarness:
         self.valid_frac = np.asarray(self._log_np.valid, np.float64).mean(axis=-1)
         self.sim = Sim()
         self.storage = CheckpointStorage()
-        self.consumer = Consumer(window_len=cfg.window_len)
+        self.consumer = Consumer(window_len=cfg.window_len, assigner=query.assigner)
         self.evicted_windows = 0
         # jitted dataplane
         self.fold_fn = jax.jit(query.fold)

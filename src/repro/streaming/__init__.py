@@ -3,7 +3,14 @@ the paper's global-aggregation queries (Q0/Q4/Q7 + the Query-1 running
 example) over Windowed CRDTs, and the Flink-like centralized baseline."""
 from repro.streaming.events import EventBatch, KIND_BID, KIND_AUCTION, KIND_PERSON
 from repro.streaming.generator import NexmarkConfig, generate_log
-from repro.streaming.queries import Query, make_q0, make_q1_ratio, make_q4, make_q7
+from repro.streaming.queries import (
+    Query,
+    make_q0,
+    make_q1_ratio,
+    make_q4,
+    make_q5,
+    make_q7,
+)
 
 __all__ = [
     "EventBatch",
@@ -14,6 +21,7 @@ __all__ = [
     "generate_log",
     "Query",
     "make_q0",
+    "make_q5",
     "make_q1_ratio",
     "make_q4",
     "make_q7",

@@ -17,6 +17,14 @@ The queries:
 * **Q7**  highest bids — global top-k lattice per window.
 * **Q1-ratio** — the paper's running example (Listing 2): partition-local bid
   count over global bid count.
+* **Q5**  hot items — per-auction bid counts + top-1 over an overlapping
+  sliding (hopping) window, the classic Nexmark query tumbling windows
+  cannot express.
+
+Windowing is a first-class :class:`~repro.core.window.WindowAssigner`
+(DESIGN.md §8): every maker takes ``hop`` (None/0/window_len = tumbling,
+anything else = hopping), and every oracle masks events with
+``assigner.contains(wid, ts)`` so ground truth generalizes with the query.
 
 Every query also ships an ``oracle``: the same aggregation computed directly
 over the whole log with plain jnp — the ground truth for exactly-once and
@@ -32,6 +40,7 @@ import jax.numpy as jnp
 
 from repro.core import wcrdt as W
 from repro.core.wcrdt import WSpec, WState
+from repro.core.window import WindowAssigner, as_assigner
 from repro.streaming.events import KIND_BID, EventBatch
 from repro.streaming.generator import NUM_CATEGORIES, batch_watermark
 
@@ -41,6 +50,7 @@ class Query:
     name: str
     num_partitions: int
     window_len: int
+    assigner: WindowAssigner
     shared_specs: tuple[WSpec, ...]
     local_spec: WSpec | None
     init_shared: Callable[[], tuple[WState, ...]]
@@ -62,7 +72,8 @@ class Query:
         return W.global_watermark(self.local_spec, local)
 
     def window_of(self, ts):
-        return jnp.asarray(ts, jnp.int32) // jnp.int32(self.window_len)
+        """Newest window containing ``ts`` (the only one, under Tumbling)."""
+        return self.assigner.window_of(jnp.asarray(ts, jnp.int32))
 
 
 def _mk_local_spec(kind: str, window_len: int, num_slots: int, **kw) -> WSpec:
@@ -75,8 +86,12 @@ def _mk_local_spec(kind: str, window_len: int, num_slots: int, **kw) -> WSpec:
 # ---------------------------------------------------------------------------
 
 
-def make_q0(num_partitions: int, window_len: int = 1000, num_slots: int = 16) -> Query:
-    lspec = _mk_local_spec("gcounter", window_len, num_slots)
+def make_q0(
+    num_partitions: int, window_len: int = 1000, num_slots: int = 16,
+    hop: int | None = None,
+) -> Query:
+    assigner = as_assigner(window_len, hop)
+    lspec = _mk_local_spec("gcounter", window_len, num_slots, assigner=assigner)
 
     def init_local():
         return lspec.zero()
@@ -95,7 +110,7 @@ def make_q0(num_partitions: int, window_len: int = 1000, num_slots: int = 16) ->
         return jnp.reshape(v, (1,)), ok
 
     def oracle(log: EventBatch, wid, partition=None):
-        m = log.valid & (log.ts // window_len == wid)
+        m = log.valid & assigner.contains(wid, log.ts)
         if partition is not None:
             m = m[partition]
         return jnp.sum(m.astype(jnp.float32))
@@ -104,6 +119,7 @@ def make_q0(num_partitions: int, window_len: int = 1000, num_slots: int = 16) ->
         name="q0",
         num_partitions=num_partitions,
         window_len=window_len,
+        assigner=assigner,
         shared_specs=(),
         local_spec=lspec,
         init_shared=lambda: (),
@@ -125,9 +141,13 @@ def make_q4(
     window_len: int = 1000,
     num_slots: int = 16,
     num_categories: int = NUM_CATEGORIES,
+    hop: int | None = None,
 ) -> Query:
-    sum_spec = W.wgcounter(window_len, num_slots, num_partitions, key_shape=(num_categories,))
-    cnt_spec = W.wgcounter(window_len, num_slots, num_partitions, key_shape=(num_categories,))
+    assigner = as_assigner(window_len, hop)
+    sum_spec = W.wgcounter(window_len, num_slots, num_partitions,
+                           key_shape=(num_categories,), assigner=assigner)
+    cnt_spec = W.wgcounter(window_len, num_slots, num_partitions,
+                           key_shape=(num_categories,), assigner=assigner)
 
     def init_shared():
         return (sum_spec.zero(), cnt_spec.zero())
@@ -156,7 +176,7 @@ def make_q4(
         return avg, ok1 & ok2
 
     def oracle(log: EventBatch, wid, partition=None):
-        m = log.valid & (log.kind == KIND_BID) & (log.ts // window_len == wid)
+        m = log.valid & (log.kind == KIND_BID) & assigner.contains(wid, log.ts)
         cat_onehot = jax.nn.one_hot(log.category, num_categories, dtype=jnp.float32)
         w = m.astype(jnp.float32)[..., None] * cat_onehot
         sums = jnp.sum(w * log.price[..., None], axis=tuple(range(w.ndim - 1)))
@@ -167,6 +187,7 @@ def make_q4(
         name="q4",
         num_partitions=num_partitions,
         window_len=window_len,
+        assigner=assigner,
         shared_specs=(sum_spec, cnt_spec),
         local_spec=None,
         init_shared=init_shared,
@@ -185,13 +206,21 @@ def make_q4(
 
 def make_q7(
     num_partitions: int, window_len: int = 1000, num_slots: int = 16, k: int = 8,
-    topk_active: int = 4,
+    topk_active: int = 4, hop: int | None = None,
 ) -> Query:
     """``topk_active``: window offsets folded per batch.  A partition-ordered
     batch spans ceil(batch_span/window_len)+1 windows; 2 suffices for the
     default rates (batch span ~0.1-0.2 windows) and is 1.7x faster than 8
-    (EXPERIMENTS.md §Perf iteration C); 4 is the safe default."""
-    topk_spec = W.wtopk(window_len, num_slots, num_partitions, k, max_active_windows=topk_active)
+    (EXPERIMENTS.md §Perf iteration C); 4 is the safe default.  Under a
+    hopping assigner each event multi-emits into window_len // hop windows,
+    so the active span grows by that factor — clamped to the ring size,
+    since TopK's fast fold requires distinct slots per active offset
+    (offsets beyond the ring would alias and drop folds)."""
+    assigner = as_assigner(window_len, hop)
+    if topk_active is not None:  # None = wtopk's exact unbounded fold path
+        topk_active = min(topk_active * assigner.windows_per_event, num_slots)
+    topk_spec = W.wtopk(window_len, num_slots, num_partitions, k,
+                        max_active_windows=topk_active, assigner=assigner)
 
     def init_shared():
         return (topk_spec.zero(),)
@@ -213,7 +242,7 @@ def make_q7(
         return out, ok
 
     def oracle(log: EventBatch, wid, partition=None):
-        m = log.valid & (log.kind == KIND_BID) & (log.ts // window_len == wid)
+        m = log.valid & (log.kind == KIND_BID) & assigner.contains(wid, log.ts)
         prices = jnp.where(m, log.price, -jnp.inf).reshape(-1)
         ids = jnp.where(m, log.auction, 0).reshape(-1)
         sv, si = jax.lax.sort((prices, ids.astype(jnp.uint32)), dimension=-1, num_keys=2)
@@ -223,6 +252,7 @@ def make_q7(
         name="q7",
         num_partitions=num_partitions,
         window_len=window_len,
+        assigner=assigner,
         shared_specs=(topk_spec,),
         local_spec=None,
         init_shared=init_shared,
@@ -240,10 +270,12 @@ def make_q7(
 
 
 def make_q1_ratio(
-    num_partitions: int, window_len: int = 1000, num_slots: int = 16
+    num_partitions: int, window_len: int = 1000, num_slots: int = 16,
+    hop: int | None = None,
 ) -> Query:
-    gspec = W.wgcounter(window_len, num_slots, num_partitions)
-    lspec = _mk_local_spec("gcounter", window_len, num_slots)
+    assigner = as_assigner(window_len, hop)
+    gspec = W.wgcounter(window_len, num_slots, num_partitions, assigner=assigner)
+    lspec = _mk_local_spec("gcounter", window_len, num_slots, assigner=assigner)
 
     def init_shared():
         return (gspec.zero(),)
@@ -272,7 +304,7 @@ def make_q1_ratio(
         return jnp.reshape(ratio, (1,)), ok1 & ok2
 
     def oracle(log: EventBatch, wid, partition=None):
-        m = log.valid & (log.kind == KIND_BID) & (log.ts // window_len == wid)
+        m = log.valid & (log.kind == KIND_BID) & assigner.contains(wid, log.ts)
         total = jnp.sum(m.astype(jnp.float32))
         if partition is None:
             return total
@@ -283,6 +315,7 @@ def make_q1_ratio(
         name="q1_ratio",
         num_partitions=num_partitions,
         window_len=window_len,
+        assigner=assigner,
         shared_specs=(gspec,),
         local_spec=lspec,
         init_shared=init_shared,
@@ -291,4 +324,78 @@ def make_q1_ratio(
         read=read,
         oracle=oracle,
         out_width=1,
+    )
+
+# ---------------------------------------------------------------------------
+# Q5: hot items — top-1 auction by bid count over a sliding (hopping) window
+# ---------------------------------------------------------------------------
+
+
+def make_q5(
+    num_partitions: int, window_len: int = 1000, num_slots: int = 16,
+    hop: int | None = None, num_auctions: int = 64,
+) -> Query:
+    """Nexmark Q5: which auction received the most bids in each sliding
+    window?  The query overlapping windows exist for — a tumbling window
+    misses bursts straddling window edges.
+
+    Defaults to ``hop = window_len // 2`` (each event lives in 2 windows);
+    pass ``hop=window_len`` for the tumbling degenerate.  State is one
+    per-auction keyed count lattice (GCounter, no shuffle); the read takes
+    the argmax — output lanes are ``[count, auction_bucket]``.  Auction ids
+    are bucketed ``auction % num_auctions`` to keep the keyed state dense
+    (DESIGN.md §8 records the deviation); the oracle buckets identically,
+    and counts are small integers, exact in f32 — so replica reads are
+    byte-identical to the oracle under any merge order.
+    """
+    hop = window_len // 2 if hop is None else hop
+    assigner = as_assigner(window_len, hop)
+    cnt_spec = W.wgcounter(window_len, num_slots, num_partitions,
+                           key_shape=(num_auctions,), assigner=assigner)
+
+    def init_shared():
+        return (cnt_spec.zero(),)
+
+    def fold(shared, local, batch: EventBatch, partition, batch_idx=None):
+        (c,) = shared
+        is_bid = batch.valid & (batch.kind == KIND_BID)
+        bucket = (batch.auction % num_auctions).astype(jnp.int32)
+        c = W.insert(
+            cnt_spec, c, partition, batch.ts, is_bid, batch_idx=batch_idx,
+            actor=partition, amounts=jnp.ones_like(batch.price), keys=bucket,
+        )
+        c = W.increment_watermark(cnt_spec, c, partition, batch_watermark(batch))
+        return (c,), local
+
+    def read(shared, local, wid):
+        (c,) = shared
+        counts, ok = W.window_value(cnt_spec, c, wid)
+        hot = jnp.argmax(counts)  # ties -> lowest bucket, same as the oracle
+        out = jnp.stack([counts[hot], hot.astype(jnp.float32)])
+        return out, ok
+
+    def oracle(log: EventBatch, wid, partition=None):
+        m = log.valid & (log.kind == KIND_BID) & assigner.contains(wid, log.ts)
+        bucket = (log.auction % num_auctions).astype(jnp.int32)
+        onehot = jax.nn.one_hot(bucket, num_auctions, dtype=jnp.float32)
+        cnts = jnp.sum(
+            m.astype(jnp.float32)[..., None] * onehot,
+            axis=tuple(range(onehot.ndim - 1)),
+        )
+        hot = jnp.argmax(cnts)
+        return jnp.stack([cnts[hot], hot.astype(jnp.float32)])
+
+    return Query(
+        name="q5",
+        num_partitions=num_partitions,
+        window_len=window_len,
+        assigner=assigner,
+        shared_specs=(cnt_spec,),
+        local_spec=None,
+        init_shared=init_shared,
+        init_local=lambda: None,
+        fold=fold,
+        read=read,
+        oracle=oracle,
+        out_width=2,
     )
