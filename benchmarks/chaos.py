@@ -1,0 +1,125 @@
+"""Chaos fabric benchmark: Holon vs the centralized baseline on an
+*imperfect* network (runtime/net.py, docs/protocol.md §4).
+
+Three families of rows (section ``chaos`` in BENCH_pr5.json):
+
+* **loss sweep** — gossip/shuffle message loss ∈ {0, 1%, 10%}.  CRDT gossip
+  degrades gracefully (a lost delta is subsumed by the next round's
+  delta-since-unmoved-baseline, so values stay byte-identical to the
+  lossless oracle and only latency moves); the baseline's TCP-like shuffle
+  pays one retransmit timeout per lost transmission per tree hop.
+* **partition-and-heal** — a 2-way split longer than the centralized
+  detector's timeout: Holon's sides keep emitting (split-brain work
+  stealing is safe — folds are idempotent under lattice merge, duplicates
+  dedup) while the baseline goes down globally and replays after heal.
+* **jittered links** — lognormal per-link latency jitter; gossip absorbs
+  reordering (joins commute), the aggregation tree's slowest path grows.
+
+Every Holon row cross-checks its deduplicated window values against the
+lossless oracle (``values=identical``) — convergence despite loss is the
+paper's claim, so the benchmark carries the evidence next to the numbers.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from benchmarks.common import emit, timer
+from repro.runtime import Scenario, SimConfig, run_flink, run_holon
+from repro.streaming import make_q7
+
+
+def chaos_config(quick: bool = False) -> SimConfig:
+    return SimConfig(
+        num_batches=120 if quick else 240,
+        window_len=500,
+        num_slots=64,
+        sync_interval_ms=50.0,
+        ckpt_interval_ms=300.0,
+    )
+
+
+def values_vs(consumer, oracle) -> str:
+    """'identical' iff every oracle window is present with byte-equal value."""
+    got = {k: np.asarray(r.value) for k, r in consumer.records.items()}
+    ref = {k: np.asarray(r.value) for k, r in oracle.records.items()}
+    missing = len(set(ref) - set(got))
+    mismatch = sum(
+        1 for k in ref if k in got and not np.array_equal(got[k], ref[k])
+    )
+    if missing == 0 and mismatch == 0:
+        return "identical"
+    return f"missing{missing}_mismatch{mismatch}"
+
+
+def _row(c, oracle=None, base_avg=None) -> str:
+    s = c.latency_stats()
+    ev = sum(n for _, n in c.events_consumed)
+    t_end = max((t for t, _ in c.events_consumed), default=1.0)
+    drops = sum(st["dropped"] for st in c.net_stats.values())
+    retries = sum(st["retries"] for st in c.net_stats.values())
+    wire_mb = sum(st["bytes"] for st in c.net_stats.values()) / 1e6
+    parts = [
+        f"avg_ms={s['avg']:.0f}", f"p99_ms={s['p99']:.0f}", f"n={s['n']}",
+        f"tput_ev_s={ev / (t_end / 1e3):.0f}", f"wire_mb={wire_mb:.2f}",
+        f"dropped={drops}", f"retries={retries}",
+    ]
+    if base_avg:
+        parts.append(f"degradation_x={s['avg'] / base_avg:.2f}")
+    if oracle is not None:
+        parts.append(f"values={values_vs(c, oracle)}")
+    return ";".join(parts)
+
+
+def main(quick: bool = False):
+    cfg = chaos_config(quick)
+    q = make_q7(cfg.num_partitions, window_len=cfg.window_len, num_slots=cfg.num_slots)
+    horizon = cfg.horizon_ms + 30_000.0
+
+    # ---- gossip/shuffle loss sweep ----------------------------------------
+    base = {}
+    for pct in (0, 1, 10):
+        cfgl = dataclasses.replace(cfg, net_loss=pct / 100.0)
+        for system, runner in (("holon", run_holon), ("flink", run_flink)):
+            with timer() as tm:
+                c = runner(cfgl, q, horizon_ms=horizon)
+            if pct == 0:
+                base[system] = c
+            oracle = base["holon"] if system == "holon" else None
+            emit(
+                f"chaos/loss{pct}/{system}", tm.dt * 1e6,
+                _row(c, oracle=oracle, base_avg=base[system].latency_stats()["avg"]),
+            )
+
+    # ---- 2-way partition, heal after detector-visible duration -------------
+    members = cfg.initial_membership
+    t0 = 4000.0 if quick else 8000.0
+    t1 = t0 + (4000.0 if quick else 8000.0)
+    groups = (members[: len(members) // 2], members[len(members) // 2:])
+    scen = Scenario("partition").partition(t0, *groups).heal(t1)
+    for system, runner in (("holon", run_holon), ("flink", run_flink)):
+        with timer() as tm:
+            c = runner(cfg, q, scen, horizon_ms=horizon)
+        oracle = base["holon"] if system == "holon" else None
+        emit(
+            f"chaos/partition_heal/{system}", tm.dt * 1e6,
+            _row(c, oracle=oracle, base_avg=base[system].latency_stats()["avg"]),
+        )
+
+    # ---- lognormal link jitter ---------------------------------------------
+    cfgj = dataclasses.replace(cfg, net_jitter="lognormal", net_jitter_ms=20.0)
+    for system, runner in (("holon", run_holon), ("flink", run_flink)):
+        with timer() as tm:
+            c = runner(cfgj, q, horizon_ms=horizon)
+        oracle = base["holon"] if system == "holon" else None
+        emit(
+            f"chaos/jitter_lognormal20/{system}", tm.dt * 1e6,
+            _row(c, oracle=oracle, base_avg=base[system].latency_stats()["avg"]),
+        )
+
+    return base
+
+
+if __name__ == "__main__":
+    main()

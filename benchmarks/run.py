@@ -2,11 +2,12 @@
 
 Prints ``name,us_per_call,derived`` CSV lines and writes the same rows as
 machine-readable JSON (``{"sections": {section: [row, ...]}}``) to
-``BENCH_pr4.json`` so the perf trajectory accumulates across PRs.  Sections:
+``BENCH_pr5.json`` so the perf trajectory accumulates across PRs.  Sections:
   fig6_table2   failure recovery latency (Holon vs Flink-like)
   fig7_8        latency sensitivity under failures
   fig9          scalability with cluster size
   elasticity    4→8→4 elastic transitions vs stop-the-world rebalance
+  chaos         lossy/partitioned/jittered network fabric (Holon vs Flink)
   throughput    max-throughput (sim peak) + real dataplane events/s
   roofline      per-(arch x shape) roofline terms from the dry-run
   kernels       WCRDT fold/merge/topk microbenchmarks
@@ -21,7 +22,7 @@ import sys
 import traceback
 from pathlib import Path
 
-BENCH_JSON = Path(__file__).resolve().parents[1] / "BENCH_pr4.json"
+BENCH_JSON = Path(__file__).resolve().parents[1] / "BENCH_pr5.json"
 
 
 def main() -> None:
@@ -33,6 +34,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (
+        chaos,
         elasticity,
         failure_recovery,
         kernels_bench,
@@ -50,6 +52,7 @@ def main() -> None:
         "fig7_8": sensitivity.main,
         "fig9": scalability.main,
         "elasticity": elasticity.main,
+        "chaos": chaos.main,
     }
     from benchmarks import common
 

@@ -16,6 +16,7 @@ from repro.runtime.config import (
     as_scenario,
 )
 from repro.runtime.consumer import Consumer
+from repro.runtime.net import LinkProfile, NetworkFabric
 from repro.runtime.storage import CheckpointStorage
 from repro.runtime.harness import HolonHarness, assignment, run_holon
 from repro.runtime.flink_baseline import FlinkHarness, run_flink
@@ -29,6 +30,8 @@ __all__ = [
     "assignment",
     "Consumer",
     "CheckpointStorage",
+    "LinkProfile",
+    "NetworkFabric",
     "HolonHarness",
     "run_holon",
     "FlinkHarness",

@@ -38,6 +38,21 @@ class SimConfig:
     storage_rtt_ms: float = 50.0  # remote checkpoint read/write RTT
     steal_delay_ms: float = 20.0  # control-plane work-steal handshake
 
+    # --- network fabric (runtime/net.py, docs/protocol.md §4) ---
+    # Defaults model the perfect wire the runtime always assumed: zero loss,
+    # fixed latency (broadcast_delay_ms / storage_rtt_ms above), no reorder —
+    # under which the fabric schedules exactly the pre-fabric event sequence.
+    net_loss: float = 0.0  # gossip message-loss probability per send
+    net_jitter: str = "fixed"  # per-link latency dist: fixed|uniform|lognormal
+    net_jitter_ms: float = 0.0  # jitter scale added to the base latency
+    net_reorder_prob: float = 0.0  # chance of an extra bounded-reorder delay
+    net_reorder_ms: float = 0.0  # size of that extra delay window
+    net_seed: int = -1  # fabric RNG seed; -1 reuses the workload seed
+    net_rto_ms: float = 200.0  # reliable-tier retransmit timeout
+    storage_loss: float = 0.0  # loss on node<->storage RPC legs
+    storage_retry_ms: float = 100.0  # RPC re-issue delay after a lost leg
+    net_trace: bool = False  # record the per-message delivery trace
+
     # --- Flink-like centralized baseline (paper §5.1 config) ---
     flink_hb_interval_ms: float = 4000.0  # paper: 4 s
     flink_hb_timeout_ms: float = 6000.0  # paper: 6 s
@@ -64,41 +79,62 @@ class SimConfig:
         return tuple(range(self.num_nodes))
 
 
-EVENT_KINDS = ("crash", "restart", "scale_out", "scale_in")
+EVENT_KINDS = (
+    "crash", "restart", "scale_out", "scale_in",
+    # network-fabric events (runtime/net.py, docs/protocol.md §4)
+    "partition", "heal", "degrade",
+)
 
 
 @dataclasses.dataclass(frozen=True)
 class ScenarioEvent:
-    """One timed control-plane action over a set of node ids."""
+    """One timed control-plane action over a set of node ids.
+
+    ``partition`` carries ``groups`` (node-id sets that stay mutually
+    connected) instead of ``nodes``; ``degrade`` carries the affected
+    ``nodes`` plus the ``loss``/``jitter_ms`` overrides to apply (both None
+    clears the nodes' degradation)."""
 
     t_ms: float
     kind: str  # one of EVENT_KINDS
     nodes: tuple[int, ...]
+    groups: tuple[tuple[int, ...], ...] = ()
+    loss: float | None = None
+    jitter_ms: float | None = None
 
     def __post_init__(self):
         if self.kind not in EVENT_KINDS:
             raise ValueError(f"unknown scenario event kind {self.kind!r}")
+        if self.kind == "partition" and len(self.groups) < 2:
+            raise ValueError("partition needs at least two groups")
 
 
 @dataclasses.dataclass(frozen=True)
 class Scenario:
-    """General timed control-plane script: crashes, restarts, and elastic
-    membership changes (docs/protocol.md §3).  Build fluently:
+    """General timed control-plane script: crashes, restarts, elastic
+    membership changes (docs/protocol.md §3), and network-fabric faults
+    (docs/protocol.md §4).  Build fluently:
 
         Scenario("elastic").scale_out(4000, 4, 5).scale_in(9000, 4, 5)
+        Scenario("split").partition(8000, (0, 1), (2, 3, 4)).heal(16000)
 
     ``crash``/``restart`` model unplanned failure + recovery of an existing
     node; ``scale_out`` adds brand-new nodes (or revives drained ones) that
     bootstrap from a live peer; ``scale_in`` drains nodes gracefully — final
-    delta flush + handoff checkpoints before departure.
+    delta flush + handoff checkpoints before departure.  ``partition``
+    splits the network into mutually unreachable groups until ``heal``;
+    ``degrade`` worsens (or, with no overrides, restores) the links touching
+    a set of nodes.
     """
 
     name: str = "baseline"
     events: tuple[ScenarioEvent, ...] = ()
 
-    def at(self, t_ms: float, kind: str, *nodes: int) -> "Scenario":
-        ev = ScenarioEvent(float(t_ms), kind, tuple(int(n) for n in nodes))
+    def _add(self, ev: ScenarioEvent) -> "Scenario":
         return dataclasses.replace(self, events=self.events + (ev,))
+
+    def at(self, t_ms: float, kind: str, *nodes: int) -> "Scenario":
+        return self._add(ScenarioEvent(float(t_ms), kind, tuple(int(n) for n in nodes)))
 
     def crash(self, t_ms: float, *nodes: int) -> "Scenario":
         return self.at(t_ms, "crash", *nodes)
@@ -111,6 +147,28 @@ class Scenario:
 
     def scale_in(self, t_ms: float, *nodes: int) -> "Scenario":
         return self.at(t_ms, "scale_in", *nodes)
+
+    def partition(self, t_ms: float, *groups) -> "Scenario":
+        """Split the fabric into ``groups`` (iterables of node ids) that can
+        only talk within themselves; nodes in no group form one residual
+        side, and checkpoint storage stays reachable from everyone."""
+        gs = tuple(tuple(int(n) for n in g) for g in groups)
+        return self._add(ScenarioEvent(float(t_ms), "partition", (), groups=gs))
+
+    def heal(self, t_ms: float) -> "Scenario":
+        return self._add(ScenarioEvent(float(t_ms), "heal", ()))
+
+    def degrade(
+        self, t_ms: float, nodes, loss: float | None = None,
+        jitter_ms: float | None = None,
+    ) -> "Scenario":
+        """Worsen every link touching ``nodes`` (loss and/or uniform jitter
+        on top of the configured profile); with both overrides None the
+        nodes' degradation is cleared."""
+        ns = tuple(int(n) for n in nodes)
+        return self._add(
+            ScenarioEvent(float(t_ms), "degrade", ns, loss=loss, jitter_ms=jitter_ms)
+        )
 
     @classmethod
     def baseline(cls) -> "Scenario":

@@ -40,6 +40,9 @@ class Consumer:
         self.sync_nacks = 0
         self.sync_bytes = 0.0
         self.sync_bytes_full = 0.0
+        # per-message-class fabric meters ({cls: {msgs, bytes, dropped,
+        # retries}}), filled from NetworkFabric.class_stats() at end of run
+        self.net_stats: dict[str, dict] = {}
 
     # -- output path --------------------------------------------------------
     def emit(self, t: float, partition: int, window: int, value) -> bool:

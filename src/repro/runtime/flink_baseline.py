@@ -17,7 +17,16 @@ Models the architecture the paper compares against:
   detect + restart + restore.
 
 What differs from Holon is purely the coordination structure — which is the
-paper's point: same logs, same windows, same per-batch compute cost.
+paper's point: same logs, same windows, same per-batch compute cost.  Both
+runtimes also share the same :class:`~repro.runtime.net.NetworkFabric`
+(docs/protocol.md §4), so chaos comparisons are apples-to-apples: the tree's
+shuffle partials ride the *reliable* tier — a real Flink job runs on TCP, so
+message loss surfaces as retransmit latency (one ``net_rto_ms`` per lost
+transmission per hop) rather than silent drops, and a network partition
+parks partials until heal.  A partition that separates TaskManagers from the
+JobManager side (the group holding node 0) is detected like a node failure —
+after ``flink_hb_timeout_ms`` the job goes down globally, and recovery can
+only start once the fabric heals.
 """
 from __future__ import annotations
 
@@ -27,6 +36,7 @@ import numpy as np
 
 from repro.runtime.config import FailureScenario, Scenario, SimConfig, as_scenario
 from repro.runtime.consumer import Consumer
+from repro.runtime.net import NetworkFabric
 from repro.runtime.sim import Sim
 from repro.streaming.events import EventBatch
 from repro.streaming.generator import NexmarkConfig, generate_log
@@ -34,6 +44,8 @@ from repro.streaming.queries import Query
 
 # Flink's default execution.buffer-timeout — dominates small-record latency.
 BUFFER_TIMEOUT_MS = 100.0
+# nominal wire size of one pre-aggregated window partial sent up the tree
+PARTIAL_BYTES = 256.0
 
 
 class FlinkHarness:
@@ -53,6 +65,9 @@ class FlinkHarness:
         # logs keep the A/B cost models apples-to-apples
         self.valid_frac = np.asarray(self.log.valid, np.float64).mean(axis=-1)
         self.sim = Sim()
+        # same fabric profile as the Holon runtime (docs/protocol.md §4);
+        # the baseline's traffic rides the reliable tier (TCP semantics)
+        self.net = NetworkFabric.from_config(self.sim, cfg)
         self.consumer = Consumer(window_len=cfg.window_len, assigner=query.assigner)
         self.tree_depth = max(
             1, math.ceil(math.log(max(cfg.num_partitions, 2), cfg.flink_tree_fanin))
@@ -98,8 +113,16 @@ class FlinkHarness:
         for wid in range(closed):
             if (wid, pid) not in self.forwarded:
                 self.forwarded.add((wid, pid))
-                delay = self.tree_depth * (cfg.shuffle_hop_ms + BUFFER_TIMEOUT_MS)
-                self.sim.after(delay, lambda w=wid, p=pid: self._arrive(w, p))
+                # tree_depth reliable hops toward the root (node 0): each
+                # hop pays network latency + the output-buffer flush, plus
+                # one RTO per lost transmission; a partition parks the
+                # partial at the fabric until heal
+                self.net.send_reliable(
+                    self.node_of[pid], 0, "shuffle", PARTIAL_BYTES,
+                    lambda w=wid, p=pid: self._arrive(w, p),
+                    latency_ms=cfg.shuffle_hop_ms + BUFFER_TIMEOUT_MS,
+                    hops=self.tree_depth,
+                )
         proc = max(cfg.batch_proc_ms * frac, cfg.batch_proc_ms / cfg.events_per_batch)
         self.sim.after(proc, lambda: self._loop_part(pid))
 
@@ -140,6 +163,30 @@ class FlinkHarness:
             self._recover()
         # else: job stays down until a node restarts (or forever — Fig. 6)
 
+    # ---- network partitions (docs/protocol.md §4) --------------------------
+    def _jm_separated(self) -> bool:
+        """Is any alive TaskManager unreachable from the JobManager side
+        (the partition group holding node 0)?"""
+        return self.net.partitioned() and any(
+            self.node_alive[n] and not self.net.reachable(n, 0)
+            for n in range(self.cfg.num_nodes)
+        )
+
+    def _on_partition(self, groups):
+        self.net.set_partition(*groups)
+        self.sim.after(self.cfg.flink_hb_timeout_ms, self._detect_partition)
+
+    def _detect_partition(self):
+        # JM heartbeats time out across the cut: global stop, like a crash —
+        # but recovery cannot complete until the fabric heals
+        if not self.job_dead and not self.down and self._jm_separated():
+            self.down = True
+
+    def _on_heal(self):
+        self.net.heal()
+        if self.down and not self.job_dead:
+            self._recover()
+
     def _recover(self):
         cfg = self.cfg
 
@@ -148,6 +195,8 @@ class FlinkHarness:
                 return
             if not (all(self.node_alive) or cfg.flink_spare_slots):
                 return
+            if self._jm_separated():
+                return  # still partitioned; the heal event retries recovery
             self.down = False
             # spare slots: reassign dead nodes' partitions to live nodes
             live = [n for n in range(cfg.num_nodes) if self.node_alive[n]]
@@ -181,6 +230,17 @@ class FlinkHarness:
             elif ev.kind == "restart":
                 for nid in ev.nodes:
                     self.sim.at(ev.t_ms, lambda n=nid: self.restart_node(n))
+            elif ev.kind == "partition":
+                self.sim.at(ev.t_ms, lambda gs=ev.groups: self._on_partition(gs))
+            elif ev.kind == "heal":
+                self.sim.at(ev.t_ms, self._on_heal)
+            elif ev.kind == "degrade":
+                self.sim.at(
+                    ev.t_ms,
+                    lambda e=ev: self.net.degrade(
+                        e.nodes, loss=e.loss, jitter_ms=e.jitter_ms
+                    ),
+                )
             else:
                 raise ValueError(
                     f"Flink baseline is fixed-membership; {ev.kind!r} events "
@@ -188,6 +248,7 @@ class FlinkHarness:
                 )
         horizon = horizon_ms if horizon_ms is not None else cfg.horizon_ms + 5000.0
         self.sim.run(until=horizon)
+        self.consumer.net_stats = self.net.class_stats()
         return self.consumer
 
 

@@ -41,6 +41,16 @@ Failure injection flips ``alive``; restart wipes volatile state and rejoins —
 recovery is work stealing like any other reconfiguration (paper §4.3).
 Exactly-once: deterministic replay from checkpoints + consumer dedup by
 (partition, window); property-tested against a failure-free oracle.
+
+Every message above rides the :class:`~repro.runtime.net.NetworkFabric`
+(docs/protocol.md §4): gossip (heartbeats, sync deltas, acks/nacks) on the
+lossy fire-and-forget tier — convergence only needs at-least-once *eventual*
+delivery, because a lost delta is subsumed by the next round's
+delta-since-unmoved-baseline — while checkpoint put/get and the joiner's
+state request use retried request-response over idempotent handlers.
+Scenarios can partition, heal, and degrade links (``Scenario.partition`` /
+``heal`` / ``degrade``); with the default lossless zero-jitter profile the
+fabric reproduces the pre-fabric event schedule bit-for-bit.
 """
 from __future__ import annotations
 
@@ -54,6 +64,7 @@ import numpy as np
 from repro.core import wcrdt as W
 from repro.runtime.config import FailureScenario, Scenario, SimConfig, as_scenario
 from repro.runtime.consumer import Consumer
+from repro.runtime.net import CTRL_BYTES, HB_BYTES, STORAGE, NetworkFabric
 from repro.runtime.sim import Sim
 from repro.runtime.storage import CheckpointStorage, PartitionCheckpoint
 from repro.streaming.events import EventBatch
@@ -191,8 +202,9 @@ class HolonNode:
         scale-in / rebalance nearly free relative to crash recovery."""
         m = self.meta[pid]
         ck = self._checkpoint_of(pid, m)
-        self.h.sim.after(
-            self.h.cfg.storage_rtt_ms, lambda p=pid, c=ck: self.h.storage.put(p, c)
+        self.h.net.rpc(
+            self.nid, STORAGE, "ckpt_put", self.h.ckpt_nbytes,
+            lambda p=pid, c=ck: self.h.storage.put(p, c),
         )
         self._drop(pid)
 
@@ -233,8 +245,8 @@ class HolonNode:
             return
         t, ep, joining = self.h.sim.now, self.epoch, self._bootstrap_pending
         for other in self._peers():
-            self.h.sim.after(
-                self.h.cfg.broadcast_delay_ms,
+            self.h.net.send(
+                self.nid, other.nid, "hb", HB_BYTES,
                 lambda o=other, s=self.nid, tt=t, e=ep, lv=leaving, jn=joining:
                     o._on_hb(s, tt, e, lv, jn),
             )
@@ -256,12 +268,16 @@ class HolonNode:
             # joiner bootstrap (docs/protocol.md §3.1): ask the first
             # *settled* peer we hear for its full state (a co-joiner's beacon
             # carries joining=True — its empty replica would waste the
-            # one-shot handshake); the reply rides the ordinary sync path
-            # with no baseline, so it merges unconditionally
+            # one-shot handshake); the request rides the fabric's reliable
+            # tier (docs/protocol.md §4) and the reply the ordinary sync
+            # path with no baseline, so it merges unconditionally — a lost
+            # reply is absorbed because our unseeded baseline makes the
+            # server's next delta round ship its full resident state
             self._bootstrap_pending = False
-            self.h.sim.after(
-                self.h.cfg.broadcast_delay_ms,
-                lambda s=sender: self.h.nodes[s]._on_state_request(self.nid),
+            self.h.net.send_reliable(
+                self.nid, sender, "state_req", CTRL_BYTES,
+                lambda s=sender, me=self.nid:
+                    self.h.nodes[s]._on_state_request(me),
             )
 
     # ---- loops ---------------------------------------------------------------
@@ -351,11 +367,9 @@ class HolonNode:
                 shipped = self.h.delta_bytes(payload)
             else:
                 base, payload, shipped = None, snap, self.h.full_state_bytes
-            self.h.sync_msgs += 1
-            self.h.sync_bytes += shipped
             self.h.sync_bytes_full += self.h.full_state_bytes
-            self.h.sim.after(
-                self.h.cfg.broadcast_delay_ms,
+            self.h.net.send(
+                self.nid, other.nid, "sync", shipped,
                 lambda o=other, pay=payload, b=base, mk=marker: o._on_sync(
                     pay, self.nid, b, mk
                 ),
@@ -370,11 +384,9 @@ class HolonNode:
         snap = self.replica
         marker = self.h.marker_of(snap)
         self.h.bootstrap_served.append((requester, self.nid))
-        self.h.sync_msgs += 1
-        self.h.sync_bytes += self.h.full_state_bytes
         self.h.sync_bytes_full += self.h.full_state_bytes
-        self.h.sim.after(
-            self.h.cfg.broadcast_delay_ms,
+        self.h.net.send(
+            self.nid, requester, "sync", self.h.full_state_bytes,
             lambda r=requester, s=snap, mk=marker: self.h.nodes[r]._on_sync(
                 s, self.nid, None, mk
             ),
@@ -389,8 +401,8 @@ class HolonNode:
             # the gap.  Nack so the sender resets to a full-state round.
             self.h.sync_nacks += 1
             if src is not None:
-                self.h.sim.after(
-                    self.h.cfg.broadcast_delay_ms,
+                self.h.net.send(
+                    self.nid, src, "sync_nack", CTRL_BYTES,
                     lambda s=src: self.h.nodes[s]._on_sync_nack(self.nid),
                 )
             return
@@ -399,8 +411,8 @@ class HolonNode:
         for pid in self.owned:
             self._emit_ready(pid)
         if marker is not None and src is not None:
-            self.h.sim.after(
-                self.h.cfg.broadcast_delay_ms,
+            self.h.net.send(
+                self.nid, src, "sync_ack", self.h.marker_nbytes,
                 lambda s=src, mk=marker: self.h.nodes[s]._on_sync_ack(self.nid, mk),
             )
 
@@ -444,9 +456,15 @@ class HolonNode:
         for pid in range(self.h.cfg.num_partitions):
             tgt = assignment(pid, live)
             if tgt == self.nid and pid not in self.meta:
+                # steal handshake, then a fabric-routed checkpoint fetch:
+                # _finish_steal runs at the RPC's round-trip point (and
+                # re-checks the assignment under the then-current view)
                 self.h.sim.after(
-                    self.h.cfg.steal_delay_ms + self.h.cfg.storage_rtt_ms,
-                    lambda p=pid, g=gen: self._finish_steal(p, g),
+                    self.h.cfg.steal_delay_ms,
+                    lambda p=pid, g=gen: self.h.net.rpc(
+                        self.nid, STORAGE, "ckpt_get", CTRL_BYTES,
+                        lambda p=p, g=g: self._finish_steal(p, g),
+                    ),
                 )
             elif tgt != self.nid and pid in self.meta:
                 self._handoff(pid)
@@ -464,9 +482,11 @@ class HolonNode:
             return
         for pid in list(self.owned):
             ck = self._checkpoint_of(pid, self.meta[pid])
-            # async durable write completes after one storage RTT
-            self.h.sim.after(
-                self.h.cfg.storage_rtt_ms, lambda p=pid, c=ck: self.h.storage.put(p, c)
+            # async durable write completes after one storage RTT; the RPC
+            # tier re-issues lost legs (merge-on-put is idempotent)
+            self.h.net.rpc(
+                self.nid, STORAGE, "ckpt_put", self.h.ckpt_nbytes,
+                lambda p=pid, c=ck: self.h.storage.put(p, c),
             )
         self.h.sim.after(self.h.cfg.ckpt_interval_ms, lambda: self._loop_ckpt(gen))
 
@@ -489,6 +509,10 @@ class HolonHarness:
         # processing cost, so load skew translates into node load
         self.valid_frac = np.asarray(self._log_np.valid, np.float64).mean(axis=-1)
         self.sim = Sim()
+        # all inter-node and node<->storage delivery rides the fabric
+        # (runtime/net.py, docs/protocol.md §4); the default profile is the
+        # perfect wire, so fabric-off is not a mode — lossless IS the fabric
+        self.net = NetworkFabric.from_config(self.sim, cfg)
         self.storage = CheckpointStorage()
         self.consumer = Consumer(window_len=cfg.window_len, assigner=query.assigner)
         self.evicted_windows = 0
@@ -508,9 +532,15 @@ class HolonHarness:
         self.full_state_bytes = float(
             sum(W.state_nbytes(st) for st in query.init_shared())
         )
-        self.sync_msgs = 0
+        # wire sizes for messages the fabric meters: a sync ack carries the
+        # (folded, progress) marker; a checkpoint ships the replica snapshot
+        # plus the partition's local state and cursors
+        self.marker_nbytes = float(sum(f.nbytes + p.nbytes for f, p in self.zero_base))
+        loc = query.init_local()
+        self.ckpt_nbytes = self.full_state_bytes + CTRL_BYTES + (
+            float(W.state_nbytes(loc)) if loc is not None else 0.0
+        )
         self.sync_nacks = 0
-        self.sync_bytes = 0.0  # bytes actually shipped (delta or full)
         self.sync_bytes_full = 0.0  # what full-state sync would have shipped
         # dynamic membership: nid -> node, every node ever registered (the
         # broadcast-stream subscriber list); epoch bumps per reconfigure
@@ -523,6 +553,18 @@ class HolonHarness:
         self.unsubscribed: set[int] = set()
         # (requester, server) log of §3.1 bootstrap handshakes (test probe)
         self.bootstrap_served: list[tuple[int, int]] = []
+
+    # sync bandwidth now comes from the fabric's per-class meters — the
+    # single source of truth for wire bytes (docs/protocol.md §4).  "sync"
+    # covers delta/full rounds AND bootstrap full-state replies, exactly
+    # what the pre-fabric ad-hoc counters summed.
+    @property
+    def sync_msgs(self) -> int:
+        return self.net.msgs_of("sync")
+
+    @property
+    def sync_bytes(self) -> float:
+        return self.net.bytes_of("sync")
 
     @staticmethod
     def marker_of(snap) -> tuple:
@@ -614,13 +656,25 @@ class HolonHarness:
                 self.sim.at(ev.t_ms, lambda ns=ev.nodes: self.reconfigure(add=ns))
             elif ev.kind == "scale_in":
                 self.sim.at(ev.t_ms, lambda ns=ev.nodes: self.reconfigure(remove=ns))
+            elif ev.kind == "partition":
+                self.sim.at(ev.t_ms, lambda gs=ev.groups: self.net.set_partition(*gs))
+            elif ev.kind == "heal":
+                self.sim.at(ev.t_ms, self.net.heal)
+            elif ev.kind == "degrade":
+                self.sim.at(
+                    ev.t_ms,
+                    lambda e=ev: self.net.degrade(
+                        e.nodes, loss=e.loss, jitter_ms=e.jitter_ms
+                    ),
+                )
         horizon = horizon_ms if horizon_ms is not None else self.cfg.horizon_ms + 5000.0
         self.sim.run(until=horizon)
-        # expose sync-bandwidth counters on the consumer (benchmark probe)
+        # expose sync-bandwidth + fabric counters on the consumer (probe)
         self.consumer.sync_msgs = self.sync_msgs
         self.consumer.sync_nacks = self.sync_nacks
         self.consumer.sync_bytes = self.sync_bytes
         self.consumer.sync_bytes_full = self.sync_bytes_full
+        self.consumer.net_stats = self.net.class_stats()
         return self.consumer
 
 

@@ -1,9 +1,15 @@
 """Remote checkpoint storage (the paper's ``storage.put/get``).
 
-Durable key→blob store with modeled RTT.  Values are host pytrees (device
-arrays are fine — they are immutable).  Merge-on-put keeps the largest
-``nxt_idx`` per Algorithm 2's lattice rule, so concurrent checkpointers of the
-same partition (allowed by the paper) can never regress a checkpoint.
+Durable key→blob store.  Values are host pytrees (device arrays are fine —
+they are immutable).  Merge-on-put keeps the largest ``nxt_idx`` per
+Algorithm 2's lattice rule, so concurrent checkpointers of the same
+partition (allowed by the paper) can never regress a checkpoint
+(join-semilattice laws property-tested in tests/test_storage.py).
+
+All access rides the network fabric's retried request-response tier
+(docs/protocol.md §4): the service itself is synchronous and durable;
+latency, loss, and retries live on the node↔storage links, and the lattice
+rule is exactly what makes re-issued puts harmless.
 """
 from __future__ import annotations
 
