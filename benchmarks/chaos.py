@@ -25,7 +25,7 @@ import dataclasses
 
 import numpy as np
 
-from benchmarks.common import emit, timer
+from benchmarks.common import emit, export_traces, latency_fields, timer
 from repro.runtime import Scenario, SimConfig, run_flink, run_holon
 from repro.streaming import make_q7
 
@@ -61,7 +61,7 @@ def _row(c, oracle=None, base_avg=None) -> str:
     retries = sum(st["retries"] for st in c.net_stats.values())
     wire_mb = sum(st["bytes"] for st in c.net_stats.values()) / 1e6
     parts = [
-        f"avg_ms={s['avg']:.0f}", f"p99_ms={s['p99']:.0f}", f"n={s['n']}",
+        latency_fields(s),
         f"tput_ev_s={ev / (t_end / 1e3):.0f}", f"wire_mb={wire_mb:.2f}",
         f"dropped={drops}", f"retries={retries}",
     ]
@@ -72,7 +72,7 @@ def _row(c, oracle=None, base_avg=None) -> str:
     return ";".join(parts)
 
 
-def main(quick: bool = False):
+def main(quick: bool = False, trace_out: str | None = None):
     cfg = chaos_config(quick)
     q = make_q7(cfg.num_partitions, window_len=cfg.window_len, num_slots=cfg.num_slots)
     horizon = cfg.horizon_ms + 30_000.0
@@ -106,6 +106,10 @@ def main(quick: bool = False):
             f"chaos/partition_heal/{system}", tm.dt * 1e6,
             _row(c, oracle=oracle, base_avg=base[system].latency_stats()["avg"]),
         )
+    if trace_out:
+        # export obs-on traces of the partition-and-heal run (the scenario
+        # exercising the widest span taxonomy) without touching the rows
+        export_traces(cfg, q, scen, horizon, f"{trace_out}/chaos_partition")
 
     # ---- lognormal link jitter ---------------------------------------------
     cfgj = dataclasses.replace(cfg, net_jitter="lognormal", net_jitter_ms=20.0)

@@ -1,10 +1,22 @@
 """Shared benchmark plumbing: CSV emission per the harness contract, plus a
 row registry so drivers (benchmarks/run.py) can also write the results as
-machine-readable JSON (section -> rows) for the perf trajectory."""
+machine-readable JSON (section -> rows) for the perf trajectory.
+
+Timing and latency summaries are delegated to repro.obs (docs/
+observability.md §1): ``timer`` IS :class:`repro.obs.timing.WallTimer` — the
+one sanctioned wall-clock stopwatch — and :func:`latency_fields` formats a
+consumer's ``latency_stats()`` (computed by the shared
+``repro.obs.registry.summary``) so every benchmark row spells avg/p99
+identically.
+"""
 from __future__ import annotations
 
 import sys
-import time
+
+from repro.obs.timing import WallTimer
+
+# the benchmark stopwatch: wall-clock domain, `.dt` seconds after the block
+timer = WallTimer
 
 # section -> [row, ...]; populated by emit() while a section is active
 ROWS: dict[str, list[dict]] = {}
@@ -28,10 +40,41 @@ def emit(name: str, us_per_call: float, derived: str = "") -> None:
         )
 
 
-class timer:
-    def __enter__(self):
-        self.t0 = time.time()
-        return self
+def latency_fields(stats: dict, sep: str = ";") -> str:
+    """The canonical ``avg_ms=..;p99_ms=..;n=..`` spelling of a consumer's
+    ``latency_stats()`` dict, shared by every latency-reporting section."""
+    return sep.join(
+        (f"avg_ms={stats['avg']:.0f}", f"p99_ms={stats['p99']:.0f}", f"n={stats['n']}")
+    )
 
-    def __exit__(self, *a):
-        self.dt = time.time() - self.t0
+
+def export_traces(cfg, query, scenario, horizon_ms, out_prefix) -> dict:
+    """Re-run ``scenario`` with telemetry on (both runtimes) and export the
+    traces next to the benchmark rows: ``<prefix>_<system>.jsonl`` (full
+    record stream) and ``<prefix>_<system>.trace.json`` (Chrome trace-event
+    JSON — load in Perfetto / chrome://tracing, docs/observability.md §3).
+
+    A separate obs-on run, so the benchmark rows themselves keep coming from
+    the exact telemetry-off configuration they always used.  Returns
+    {system: harness} for callers that want to audit the traces too.
+    """
+    import dataclasses
+    import json
+    from pathlib import Path
+
+    from repro.runtime.flink_baseline import FlinkHarness
+    from repro.runtime.harness import HolonHarness
+
+    cfg_obs = dataclasses.replace(cfg, obs=True)
+    out: dict = {}
+    for system, harness_cls in (("holon", HolonHarness), ("flink", FlinkHarness)):
+        h = harness_cls(cfg_obs, query)
+        h.run(scenario, horizon_ms=horizon_ms)
+        prefix = Path(f"{out_prefix}_{system}")
+        prefix.parent.mkdir(parents=True, exist_ok=True)
+        prefix.with_suffix(".jsonl").write_text(h.obs.export_jsonl())
+        prefix.with_suffix(".trace.json").write_text(
+            json.dumps(h.obs.export_chrome())
+        )
+        out[system] = h
+    return out

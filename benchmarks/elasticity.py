@@ -23,7 +23,7 @@ import dataclasses
 
 import numpy as np
 
-from benchmarks.common import emit, timer
+from benchmarks.common import emit, latency_fields, timer
 from repro.runtime import Scenario, SimConfig, run_holon
 from repro.streaming import make_q7
 
@@ -64,7 +64,7 @@ def spike_stats(consumer, t0: float, win_ms: float, base_avg: float):
     return peak, settle
 
 
-def main(quick: bool = False):
+def main(quick: bool = False, trace_out: str | None = None):
     cfg = _cfg(quick)
     q = make_q7(cfg.num_partitions, window_len=cfg.window_len, num_slots=cfg.num_slots)
     horizon = cfg.horizon_ms
@@ -100,9 +100,26 @@ def main(quick: bool = False):
         emit(
             f"elasticity/{name}",
             tm.dt * 1e6,
-            f"avg_ms={s['avg']:.0f};p99_ms={s['p99']:.0f};n={s['n']};"
+            f"{latency_fields(s)};"
             f"out_peak_ms={pk_out:.0f};out_settle_ms={st_out:.0f};"
             f"in_peak_ms={pk_in:.0f};in_settle_ms={st_in:.0f}",
+        )
+    if trace_out:
+        # obs-on export of the elastic 4→8→4 run (join/drain/handoff spans);
+        # the Flink half of export_traces is skipped — the baseline is
+        # fixed-membership and rejects scale events
+        import json
+        from pathlib import Path
+
+        from repro.runtime.harness import HolonHarness
+
+        h = HolonHarness(dataclasses.replace(cfg, obs=True), q)
+        h.run(scenarios["elastic"], horizon_ms=horizon + 15_000)
+        prefix = Path(f"{trace_out}/elasticity_holon")
+        prefix.parent.mkdir(parents=True, exist_ok=True)
+        prefix.with_suffix(".jsonl").write_text(h.obs.export_jsonl())
+        prefix.with_suffix(".trace.json").write_text(
+            json.dumps(h.obs.export_chrome())
         )
 
     # exactly-once across elasticity: the elastic run's deduplicated outputs

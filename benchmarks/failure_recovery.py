@@ -11,7 +11,7 @@ import dataclasses
 
 import numpy as np
 
-from benchmarks.common import emit, timer
+from benchmarks.common import emit, latency_fields, timer
 from repro.runtime import FailureScenario, SimConfig, run_flink, run_holon
 from repro.streaming import make_q7
 
@@ -68,7 +68,7 @@ def main(quick: bool = False):
             emit(
                 f"fig6_table2/{system}/{name}",
                 tm.dt * 1e6,
-                f"avg_ms={s['avg']:.0f};p99_ms={s['p99']:.0f};n={s['n']};recovery_ms={rec:.0f};"
+                f"{latency_fields(s)};recovery_ms={rec:.0f};"
                 f"sync_mb={sync_mb:.2f};full_sync_mb={sync_full_mb:.2f};sync_nacks={nacks}",
             )
 

@@ -1,0 +1,153 @@
+"""Observability section: per-phase latency breakdown, trace-derived
+recovery timelines, and the telemetry overhead budget (docs/observability.md).
+
+Rows (section ``obs``):
+
+* ``obs/phase/<phase>/<system>`` — where a window's end-to-end latency goes:
+  ``queue`` (batch availability → dequeue), ``process`` (modeled fold cost),
+  ``emit`` (window close → first emission) from the ``phase_ms`` histograms,
+  plus ``sync_wire``/``shuffle_wire`` from the fabric's per-class
+  ``net_delivery_ms`` — the transport slice of the sync phase.
+* ``obs/recovery/<scenario>/<system>`` — the auditor's trace-extracted
+  timelines: per-crash ``time_to_recover_ms`` (crash → last owned-partition
+  re-adoption) for Holon, ``flink_downtime_ms`` for the baseline, and
+  ``time_to_settle_ms`` for both — measured from what actually happened in
+  the trace, not from consumer-side heuristics.
+* ``obs/overhead/<system>`` — same run with telemetry off vs on; the
+  acceptance budget is <5% wall-clock slowdown, and the row carries the
+  measured number so regressions are visible in the perf trajectory.
+
+Every audited run must pass — a violation raises, so the benchmark doubles
+as a protocol gate on exactly the configurations the paper reports.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import emit, timer
+from repro.obs.audit import audit_harness
+from repro.runtime import FailureScenario, SimConfig
+from repro.runtime.flink_baseline import FlinkHarness
+from repro.runtime.harness import HolonHarness
+from repro.streaming import make_q7
+
+PHASES = ("queue", "process", "emit")
+WIRE = {"holon": ("sync", "ckpt_put"), "flink": ("shuffle",)}
+SYSTEMS = {"holon": HolonHarness, "flink": FlinkHarness}
+
+
+def _cfg(quick: bool) -> SimConfig:
+    return SimConfig(
+        num_batches=120 if quick else 240,
+        window_len=500,
+        num_slots=64,
+        sync_interval_ms=50.0,
+        ckpt_interval_ms=500.0,
+    )
+
+
+def _hist_fields(h) -> str:
+    return f"avg_ms={h.avg:.2f};p50_ms={h.percentile(50):.2f};" \
+           f"p99_ms={h.percentile(99):.2f};n={h.count}"
+
+
+def main(quick: bool = False):
+    cfg = _cfg(quick)
+    q = make_q7(cfg.num_partitions, window_len=cfg.window_len, num_slots=cfg.num_slots)
+    horizon = cfg.horizon_ms + 20_000.0
+    t_fail = horizon * 0.3
+    scen = FailureScenario.concurrent(t=t_fail)
+    cfg_obs = dataclasses.replace(cfg, obs=True)
+
+    harnesses = {}
+    repeats = 2 if quick else 5
+    for system, harness_cls in SYSTEMS.items():
+        # warmup run first so the off/on comparison isn't skewed by JIT
+        # compilation of the query dataplane (cached by function identity);
+        # time only .run() — construction (log generation) is shared cost.
+        # CPU JAX dispatch noise between identical runs (±10%) dwarfs the
+        # telemetry delta, so: run off/on back-to-back PAIRS (adjacent runs
+        # share thermal/cache state), take each pair's on/off ratio, and
+        # report the median ratio — robust to the slow drift and outlier
+        # stalls that make ratio-of-mins swing run to run.
+        harness_cls(cfg, q).run(scen, horizon_ms=horizon)
+        pairs, best_on = [], None
+        for _ in range(repeats):
+            ts = {}
+            for label, c in (("off", cfg), ("on", cfg_obs)):
+                h = harness_cls(c, q)
+                with timer() as tm:
+                    h.run(scen, horizon_ms=horizon)
+                ts[label] = tm.dt
+                if label == "on" and (best_on is None or tm.dt < best_on[0]):
+                    best_on = (tm.dt, h)
+            pairs.append((ts["off"], ts["on"]))
+        t_off = min(p[0] for p in pairs)
+        t_on = best_on[0]
+        h = harnesses[system] = best_on[1]
+        ratios = sorted(on / max(off, 1e-9) for off, on in pairs)
+        overhead = (ratios[len(ratios) // 2] - 1.0) * 100.0
+        emit(
+            f"obs/overhead/{system}", t_on * 1e6,
+            f"off_ms={t_off * 1e3:.0f};on_ms={t_on * 1e3:.0f};"
+            f"overhead_pct={overhead:.1f};repeats={repeats};"
+            f"trace_records={h.obs.buf.total}",
+        )
+
+    # ---- per-phase latency breakdown ---------------------------------------
+    for system, h in harnesses.items():
+        reg = h.obs.registry
+        for phase in PHASES:
+            hist = reg.histograms("phase_ms").get(f"phase_ms{{phase={phase}}}")
+            if hist is not None and hist.count:
+                emit(f"obs/phase/{phase}/{system}", 0.0, _hist_fields(hist))
+        for cls in WIRE[system]:
+            hist = reg.histograms("net_delivery_ms").get(
+                f"net_delivery_ms{{cls={cls}}}"
+            )
+            if hist is not None and hist.count:
+                emit(f"obs/phase/{cls}_wire/{system}", 0.0, _hist_fields(hist))
+
+    # ---- trace-derived recovery timelines (crash + partition) --------------
+    members = cfg.initial_membership
+    groups = (members[: len(members) // 2], members[len(members) // 2:])
+    from repro.runtime import Scenario
+
+    part_scen = (
+        Scenario("partition").partition(t_fail, *groups).heal(t_fail + 6000.0)
+    )
+    for scen_name, scenario in (("concurrent_crash", scen), ("partition", part_scen)):
+        for system, harness_cls in SYSTEMS.items():
+            h = harnesses[system] if scenario is scen else harness_cls(cfg_obs, q)
+            if scenario is not scen:
+                h.run(scenario, horizon_ms=horizon)
+            rep = audit_harness(h)
+            if not rep.ok:
+                raise AssertionError(
+                    f"auditor failed on obs/{scen_name}/{system}:\n{rep}"
+                )
+            ttr = rep.metrics.get("time_to_recover_ms", {})
+            down = rep.metrics.get("flink_downtime_ms", [])
+            fields = [
+                "audit=ok",
+                f"settle_ms={rep.metrics.get('time_to_settle_ms', 0.0):.0f}",
+            ]
+            if ttr:
+                worst = max(ttr.values())
+                fields.append(f"ttr_max_ms={worst:.0f}")
+                fields.append(
+                    "ttr_ms=" + ",".join(f"{n}:{t:.0f}" for n, t in ttr.items())
+                )
+            if down:
+                fields.append(
+                    "downtime_ms=" + ",".join(
+                        "inf" if d == float("inf") else f"{d:.0f}" for d in down
+                    )
+                )
+            emit(f"obs/recovery/{scen_name}/{system}", 0.0, ";".join(fields))
+
+    return harnesses
+
+
+if __name__ == "__main__":
+    main()

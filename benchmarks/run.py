@@ -2,18 +2,23 @@
 
 Prints ``name,us_per_call,derived`` CSV lines and writes the same rows as
 machine-readable JSON (``{"sections": {section: [row, ...]}}``) to
-``BENCH_pr5.json`` so the perf trajectory accumulates across PRs.  Sections:
+``BENCH_pr6.json`` so the perf trajectory accumulates across PRs.  Sections:
   fig6_table2   failure recovery latency (Holon vs Flink-like)
   fig7_8        latency sensitivity under failures
   fig9          scalability with cluster size
   elasticity    4→8→4 elastic transitions vs stop-the-world rebalance
   chaos         lossy/partitioned/jittered network fabric (Holon vs Flink)
+  obs           per-phase latency breakdown + trace-audited recovery
+                timelines + telemetry overhead (docs/observability.md)
   throughput    max-throughput (sim peak) + real dataplane events/s
   roofline      per-(arch x shape) roofline terms from the dry-run
   kernels       WCRDT fold/merge/topk microbenchmarks
 
+``--trace-out DIR`` additionally exports obs-on traces (JSONL + Chrome
+trace-event JSON for Perfetto) from the chaos and elasticity sections.
+
 Usage: PYTHONPATH=src python -m benchmarks.run [--quick] [--only SECTION]
-                                               [--json PATH]
+                                               [--json PATH] [--trace-out DIR]
 """
 import argparse
 import json
@@ -22,7 +27,7 @@ import sys
 import traceback
 from pathlib import Path
 
-BENCH_JSON = Path(__file__).resolve().parents[1] / "BENCH_pr5.json"
+BENCH_JSON = Path(__file__).resolve().parents[1] / "BENCH_pr6.json"
 
 
 def main() -> None:
@@ -31,6 +36,9 @@ def main() -> None:
     ap.add_argument("--only", type=str, default=None)
     ap.add_argument("--json", type=Path, default=BENCH_JSON,
                     help="where to write the machine-readable results")
+    ap.add_argument("--trace-out", type=str, default=None,
+                    help="directory for obs-on trace exports (JSONL + Chrome "
+                         "trace JSON) from the chaos and elasticity sections")
     args = ap.parse_args()
 
     from benchmarks import (
@@ -38,6 +46,7 @@ def main() -> None:
         elasticity,
         failure_recovery,
         kernels_bench,
+        observability,
         roofline,
         scalability,
         sensitivity,
@@ -51,8 +60,11 @@ def main() -> None:
         "fig6_table2": failure_recovery.main,
         "fig7_8": sensitivity.main,
         "fig9": scalability.main,
-        "elasticity": elasticity.main,
-        "chaos": chaos.main,
+        "elasticity": lambda quick: elasticity.main(
+            quick=quick, trace_out=args.trace_out
+        ),
+        "chaos": lambda quick: chaos.main(quick=quick, trace_out=args.trace_out),
+        "obs": observability.main,
     }
     from benchmarks import common
 

@@ -1,0 +1,120 @@
+"""Observability smoke gate (scripts/test.sh obs, docs/observability.md).
+
+End-to-end drive of the telemetry stack on a small chaos run:
+
+1. run both runtimes (Holon + Flink baseline) with ``obs=True`` under a
+   lossy fabric with a crash — the scenario that exercises the widest span
+   taxonomy (exec/emit/sync/ckpt/steal + net records);
+2. export the traces (JSONL + Chrome trace-event JSON) to a temp dir;
+3. audit the Holon trace — every protocol invariant must hold;
+4. validate the Chrome export against the trace-event schema Perfetto and
+   chrome://tracing actually require (ph/ts/pid/tid types, ``X`` events
+   carry ``dur``, metadata events name processes).
+
+Exits non-zero on any failure, printing what broke.
+"""
+from __future__ import annotations
+
+import json
+import sys
+import tempfile
+from pathlib import Path
+
+from repro.obs.audit import audit_harness
+from repro.runtime import FailureScenario, SimConfig
+from repro.runtime.flink_baseline import FlinkHarness
+from repro.runtime.harness import HolonHarness
+from repro.streaming import make_q7
+
+
+def validate_chrome(doc: dict) -> list[str]:
+    """Schema check of a Chrome trace-event JSON object (docs/
+    observability.md §3): the subset of the spec Perfetto's importer needs."""
+    errs = []
+    if not isinstance(doc.get("traceEvents"), list):
+        return ["traceEvents missing or not a list"]
+    for i, ev in enumerate(doc["traceEvents"]):
+        where = f"traceEvents[{i}]"
+        if not isinstance(ev, dict):
+            errs.append(f"{where}: not an object")
+            continue
+        ph = ev.get("ph")
+        if ph not in ("X", "i", "M"):
+            errs.append(f"{where}: unexpected ph={ph!r}")
+            continue
+        if not isinstance(ev.get("name"), str) or not ev["name"]:
+            errs.append(f"{where}: missing name")
+        if ph == "M":
+            if not isinstance(ev.get("args"), dict):
+                errs.append(f"{where}: metadata event without args")
+            continue
+        for k in ("ts", "pid", "tid"):
+            if not isinstance(ev.get(k), (int, float)):
+                errs.append(f"{where}: {k} missing or non-numeric")
+        if ph == "X" and not isinstance(ev.get("dur"), (int, float)):
+            errs.append(f"{where}: complete event without dur")
+        if isinstance(ev.get("ts"), (int, float)) and ev["ts"] < 0:
+            errs.append(f"{where}: negative ts")
+    return errs[:20]
+
+
+def main() -> int:
+    cfg = SimConfig(
+        num_nodes=3, num_partitions=4, num_batches=60, window_len=500,
+        sync_interval_ms=50.0, ckpt_interval_ms=300.0,
+        net_loss=0.02, obs=True,
+    )
+    q = make_q7(cfg.num_partitions, window_len=cfg.window_len,
+                num_slots=cfg.num_slots)
+    scen = FailureScenario.concurrent(t=2000.0)
+    horizon = cfg.horizon_ms + 10_000.0
+
+    failures = []
+    with tempfile.TemporaryDirectory(prefix="holon-obs-smoke-") as td:
+        out = Path(td)
+        for system, harness_cls in (("holon", HolonHarness),
+                                    ("flink", FlinkHarness)):
+            h = harness_cls(cfg, q)
+            h.run(scen, horizon_ms=horizon)
+            jsonl = h.obs.export_jsonl()
+            (out / f"{system}.jsonl").write_text(jsonl)
+            lines = jsonl.splitlines()
+            meta = json.loads(lines[0])
+            if meta.get("meta") != "holon-trace-v1":
+                failures.append(f"{system}: bad JSONL meta header {lines[0]!r}")
+            if len(lines) != h.obs.buf.total - h.obs.buf.dropped + 1:
+                failures.append(f"{system}: JSONL line count mismatch")
+
+            chrome = h.obs.export_chrome()
+            (out / f"{system}.trace.json").write_text(json.dumps(chrome))
+            # re-parse from disk: the validated doc is the exported bytes
+            doc = json.loads((out / f"{system}.trace.json").read_text())
+            errs = validate_chrome(doc)
+            if errs:
+                failures.append(f"{system}: chrome schema: {errs}")
+            print(f"{system}: {h.obs.buf.total} records, "
+                  f"{len(doc['traceEvents'])} chrome events -> {out}")
+
+            rep = audit_harness(h)
+            print(f"{system}: {rep}")
+            if not rep.ok:
+                failures.append(f"{system}: audit failed: {rep.violations}")
+
+        # determinism spot-check: a second same-seed holon run must export
+        # byte-identical JSONL
+        h2 = HolonHarness(cfg, q)
+        h2.run(scen, horizon_ms=horizon)
+        if h2.obs.export_jsonl() != (out / "holon.jsonl").read_text():
+            failures.append("holon: same-seed trace export not byte-identical")
+
+    if failures:
+        print("OBS SMOKE FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    print("obs smoke OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

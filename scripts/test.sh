@@ -5,7 +5,8 @@
 #   scripts/test.sh slow       # the slow suite only
 #   scripts/test.sh multidevice  # multi-device suite under 8 virtual devices
 #   scripts/test.sh chaos      # network-fabric loss/partition sweeps
-#   scripts/test.sh all        # tier-1, then slow, multidevice, chaos
+#   scripts/test.sh obs        # telemetry smoke: export + audit a chaos run
+#   scripts/test.sh all        # tier-1, then slow, multidevice, chaos, obs
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -27,6 +28,11 @@ tier1() {
 }
 slow() { python -m pytest -q -m slow "$@"; }
 chaos() { python -m pytest -q -m chaos "$@"; }
+obs() {
+  # end-to-end telemetry gate: export traces from a small lossy chaos run,
+  # audit the protocol invariants, validate the Chrome trace-event schema
+  python scripts/obs_smoke.py
+}
 multidevice() {
   XLA_FLAGS="--xla_force_host_platform_device_count=8 ${XLA_FLAGS:-}" \
     python -m pytest -q -m multidevice "$@"
@@ -36,7 +42,8 @@ case "${1:-tier1}" in
   tier1) tier1 "${@:2}" ;;
   slow) slow "${@:2}" ;;
   chaos) chaos "${@:2}" ;;
+  obs) obs ;;
   multidevice) multidevice "${@:2}" ;;
-  all) tier1 "${@:2}"; slow "${@:2}"; multidevice "${@:2}"; chaos "${@:2}" ;;
-  *) echo "usage: $0 [tier1|slow|chaos|multidevice|all]" >&2; exit 2 ;;
+  all) tier1 "${@:2}"; slow "${@:2}"; multidevice "${@:2}"; chaos "${@:2}"; obs ;;
+  *) echo "usage: $0 [tier1|slow|chaos|multidevice|all|obs]" >&2; exit 2 ;;
 esac

@@ -25,7 +25,6 @@ Usage:
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
@@ -34,6 +33,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro import compat
 from repro.core import wcrdt as W
+from repro.obs.timing import WallTimer
 from repro.streaming.events import EventBatch
 from repro.streaming.generator import NexmarkConfig, generate_log
 from repro.streaming.queries import (
@@ -196,10 +196,12 @@ def main(argv=None):
                               n_windows=n_windows, first_window=first_window)
         oks, vals, sb = pipe(log)  # compile+run
         jax.block_until_ready(oks)
-        t0 = time.time()
-        oks, vals, sb = pipe(log)
-        jax.block_until_ready(oks)
-        dt = time.time() - t0
+        # wall-clock domain, explicitly: the dataplane is the one place this
+        # driver may read the host clock (docs/observability.md §1)
+        with WallTimer() as tm:
+            oks, vals, sb = pipe(log)
+            jax.block_until_ready(oks)
+        dt = tm.dt
 
     total_events = n_dev * args.batches * args.events_per_batch
     done = int(np.asarray(oks).sum()) // n_dev

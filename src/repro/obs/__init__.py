@@ -1,0 +1,43 @@
+"""Holoscope: deterministic telemetry for the Holon runtimes.
+
+Three layers (docs/observability.md), all strictly passive — no RNG draws,
+no wall-clock reads in sim paths, no simulator events that could perturb the
+run being observed:
+
+* **metrics registry** (obs/registry.py) — counters/gauges/histograms keyed
+  by node/partition/class, snapshotted on sim-time intervals;
+* **structured span tracing** (obs/records.py, obs/telemetry.py) — typed
+  records of the full protocol lifecycle in a bounded ring buffer, exported
+  to JSONL and Chrome trace-event format (Perfetto timelines);
+* **protocol auditor** (obs/audit.py) — replays a trace and asserts the
+  paper's invariants (exactly-once, monotone frontiers, causal domination,
+  acked merges, bounded recovery), extracting time-to-recover and
+  time-to-settle as first-class metrics.
+
+Determinism is the contract: a same-seed run exports a byte-identical
+trace, which is what makes the trace auditable at all.
+"""
+from repro.obs.audit import AuditReport, audit, audit_harness
+from repro.obs.records import TraceBuffer, TraceEvent, mkargs, to_chrome, to_jsonl
+from repro.obs.registry import Counter, Gauge, Histogram, MetricsRegistry, summary
+from repro.obs.telemetry import Telemetry
+from repro.obs.timing import SimTimer, WallTimer
+
+__all__ = [
+    "AuditReport",
+    "audit",
+    "audit_harness",
+    "TraceBuffer",
+    "TraceEvent",
+    "mkargs",
+    "to_chrome",
+    "to_jsonl",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "summary",
+    "Telemetry",
+    "SimTimer",
+    "WallTimer",
+]

@@ -1,0 +1,97 @@
+"""Telemetry facade: one object carrying a deployment's trace buffer and
+metrics registry through both runtimes (docs/observability.md §1).
+
+A :class:`Telemetry` is created per harness from ``SimConfig`` and threaded
+into the network fabric, checkpoint storage, consumer, and every node — the
+single owner of the bounded :class:`~repro.obs.records.TraceBuffer` and the
+:class:`~repro.obs.registry.MetricsRegistry`, so net records and protocol
+spans land in ONE time-ordered stream the auditor can replay.
+
+Two independent switches:
+
+* ``trace_net`` (``SimConfig.net_trace`` or ``obs``) — record one
+  ``net.msg`` per fabric send attempt;
+* ``on`` (``SimConfig.obs``) — record protocol spans/events and registry
+  metrics (implies net records: the auditor's ack cross-check needs them).
+
+Both default off.  Recording never draws RNG, never reads the wall clock,
+and never schedules simulator events, so with telemetry off the runtimes are
+bit-identical to a build without this module, and with it on the same seed
+exports byte-identical traces (tests/test_obs.py).
+"""
+from __future__ import annotations
+
+from repro.obs.records import TraceBuffer, TraceEvent, mkargs, to_chrome, to_jsonl
+from repro.obs.registry import MetricsRegistry
+
+
+class Telemetry:
+    __slots__ = ("sim", "on", "trace_net", "buf", "registry", "snapshot_ms")
+
+    def __init__(self, sim, on: bool = False, trace_net: bool = False,
+                 cap: int = 1 << 16, snapshot_ms: float = 500.0):
+        self.sim = sim
+        self.on = bool(on)
+        self.trace_net = bool(trace_net) or self.on
+        self.buf = TraceBuffer(cap)
+        self.registry = MetricsRegistry()
+        self.snapshot_ms = float(snapshot_ms)
+
+    @classmethod
+    def from_config(cls, sim, cfg) -> "Telemetry":
+        """The one place SimConfig's obs knobs become a telemetry instance —
+        both runtimes build theirs here, mirroring NetworkFabric.from_config."""
+        return cls(
+            sim,
+            on=cfg.obs,
+            trace_net=cfg.net_trace,
+            cap=cfg.obs_trace_cap,
+            snapshot_ms=cfg.obs_snapshot_ms,
+        )
+
+    # ---- recording ---------------------------------------------------------
+    def net_msg(self, src, dst, cls: str, nbytes: float, status: str,
+                t_deliver: float = -1.0) -> None:
+        if self.trace_net:
+            self.buf.append(TraceEvent(
+                t_ms=self.sim.now, kind="net.msg", src=src, dst=dst, cls=cls,
+                nbytes=nbytes, status=status, t_end_ms=t_deliver,
+            ))
+
+    def event(self, kind: str, node=None, partition: int = -1,
+              window: int = -1, src=None, dst=None, status: str = "",
+              t_end_ms: float = -1.0, **args) -> None:
+        """Protocol span/event (gated on ``on``; call sites in hot paths
+        guard with ``if obs.on`` themselves to skip building kwargs)."""
+        if self.on:
+            self.buf.append(TraceEvent(
+                t_ms=self.sim.now, kind=kind, node=node, partition=partition,
+                window=window, src=src, dst=dst, status=status,
+                t_end_ms=t_end_ms, args=mkargs(**args) if args else (),
+            ))
+
+    # ---- scheduling --------------------------------------------------------
+    def start_snapshots(self) -> None:
+        """Periodic registry snapshots on sim-time (no-op when ``on`` is
+        False).  Snapshots only read state — they cannot affect the run."""
+        if not self.on:
+            return
+
+        def snap():
+            self.registry.snapshot(self.sim.now)
+            self.sim.after(self.snapshot_ms, snap)
+
+        self.sim.after(self.snapshot_ms, snap)
+
+    # ---- access / export ---------------------------------------------------
+    def events(self) -> tuple[TraceEvent, ...]:
+        return self.buf.events()
+
+    def net_events(self) -> list[TraceEvent]:
+        return [ev for ev in self.buf if ev.kind == "net.msg"]
+
+    def export_jsonl(self) -> str:
+        return to_jsonl(self.buf, dropped=self.buf.dropped)
+
+    def export_chrome(self) -> dict:
+        return to_chrome(self.buf)

@@ -53,6 +53,17 @@ class SimConfig:
     storage_retry_ms: float = 100.0  # RPC re-issue delay after a lost leg
     net_trace: bool = False  # record the per-message delivery trace
 
+    # --- observability (repro/obs, docs/observability.md) ---
+    # Off by default: with ``obs=False`` (and ``net_trace=False``) the
+    # runtimes make zero telemetry records and stay bit-identical to a
+    # build without the obs layer.  ``obs=True`` records protocol
+    # spans/events + registry metrics (and implies net records — the
+    # auditor's ack cross-check needs them); recording is passive, so
+    # same-seed runs export byte-identical traces either way.
+    obs: bool = False  # structured span tracing + metrics registry
+    obs_trace_cap: int = 1 << 16  # bounded trace ring size (records)
+    obs_snapshot_ms: float = 500.0  # registry snapshot period (sim-time)
+
     # --- Flink-like centralized baseline (paper §5.1 config) ---
     flink_hb_interval_ms: float = 4000.0  # paper: 4 s
     flink_hb_timeout_ms: float = 6000.0  # paper: 6 s

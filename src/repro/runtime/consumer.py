@@ -5,14 +5,22 @@ deduplicate by (partition, window) tags (§3.3).  This consumer implements
 exactly that and doubles as the measurement probe: end-to-end latency of a
 window = first emission sim-time − window-close event-time (the analogue of
 the paper's Kafka-insertion-timestamp latency).
+
+With telemetry attached (docs/observability.md §1) every accepted/duplicate
+emission also feeds the metrics registry (``windows_emitted`` /
+``windows_duplicate`` counters, ``emit_lag_ms`` phase histogram); the
+percentile summaries behind ``latency_stats`` are the shared
+:func:`repro.obs.registry.summary` implementation, so benchmark rows and
+consumer probes can never disagree on how a p99 is computed.
 """
 from __future__ import annotations
 
 import dataclasses
-from collections import defaultdict
 from typing import Any
 
 import numpy as np
+
+from repro.obs.registry import summary
 
 
 @dataclasses.dataclass
@@ -26,11 +34,12 @@ class WindowRecord:
 
 
 class Consumer:
-    def __init__(self, window_len: float, assigner=None):
+    def __init__(self, window_len: float, assigner=None, telemetry=None):
         # ``assigner`` (core.window.WindowAssigner) supplies window extents;
         # None keeps the tumbling arithmetic for legacy callers.
         self.window_len = window_len
         self.assigner = assigner
+        self.obs = telemetry  # Telemetry or None (docs/observability.md §1)
         self.records: dict[tuple[int, int], WindowRecord] = {}
         self.events_consumed: list[tuple[float, int]] = []  # (time, count)
         self.duplicates = 0
@@ -51,15 +60,21 @@ class Consumer:
         if key in self.records:
             self.records[key].duplicates += 1
             self.duplicates += 1
+            if self.obs is not None and self.obs.on:
+                self.obs.registry.counter("windows_duplicate").inc()
             return False
         close_ts = self._close_ts(window)
+        lag = max(0.0, t - close_ts)
         self.records[key] = WindowRecord(
             partition=partition,
             window=window,
             value=value,
             emit_time=t,
-            latency=max(0.0, t - close_ts),
+            latency=lag,
         )
+        if self.obs is not None and self.obs.on:
+            self.obs.registry.counter("windows_emitted").inc()
+            self.obs.registry.histogram("phase_ms", phase="emit").observe(lag)
         return True
 
     def count_events(self, t: float, n: int) -> None:
@@ -83,15 +98,9 @@ class Consumer:
         return t, lat
 
     def latency_stats(self) -> dict[str, float]:
-        lat = self.latencies()
-        if len(lat) == 0:
-            return {"avg": float("nan"), "p99": float("nan"), "max": float("nan"), "n": 0}
-        return {
-            "avg": float(np.mean(lat)),
-            "p99": float(np.percentile(lat, 99)),
-            "max": float(np.max(lat)),
-            "n": int(len(lat)),
-        }
+        # the one shared summary implementation (repro.obs.registry.summary):
+        # benchmark rows, the auditor, and this probe all agree on percentiles
+        return summary(self.latencies())
 
     def throughput_series(self, bucket_ms: float = 1000.0) -> tuple[np.ndarray, np.ndarray]:
         if not self.events_consumed:

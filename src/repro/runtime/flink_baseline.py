@@ -27,6 +27,12 @@ parks partials until heal.  A partition that separates TaskManagers from the
 JobManager side (the group holding node 0) is detected like a node failure —
 after ``flink_hb_timeout_ms`` the job goes down globally, and recovery can
 only start once the fabric heals.
+
+Telemetry (docs/observability.md) mirrors the Holon harness so the auditor
+runs over both traces: ``exec.batch`` spans, ``emit`` records with latency
+and digest, ``flink.barrier`` per aligned checkpoint, ``node.crash`` /
+``node.restart``, and the centralized-specific ``flink.down`` /
+``flink.recover`` pair the auditor turns into downtime intervals.
 """
 from __future__ import annotations
 
@@ -34,6 +40,7 @@ import math
 
 import numpy as np
 
+from repro.obs.telemetry import Telemetry
 from repro.runtime.config import FailureScenario, Scenario, SimConfig, as_scenario
 from repro.runtime.consumer import Consumer
 from repro.runtime.net import NetworkFabric
@@ -65,10 +72,15 @@ class FlinkHarness:
         # logs keep the A/B cost models apples-to-apples
         self.valid_frac = np.asarray(self.log.valid, np.float64).mean(axis=-1)
         self.sim = Sim()
+        # shared telemetry hub, exactly as in the Holon harness — one ring,
+        # one registry, so traces from both runtimes audit identically
+        self.obs = Telemetry.from_config(self.sim, cfg)
         # same fabric profile as the Holon runtime (docs/protocol.md §4);
         # the baseline's traffic rides the reliable tier (TCP semantics)
-        self.net = NetworkFabric.from_config(self.sim, cfg)
-        self.consumer = Consumer(window_len=cfg.window_len, assigner=query.assigner)
+        self.net = NetworkFabric.from_config(self.sim, cfg, telemetry=self.obs)
+        self.consumer = Consumer(
+            window_len=cfg.window_len, assigner=query.assigner, telemetry=self.obs
+        )
         self.tree_depth = max(
             1, math.ceil(math.log(max(cfg.num_partitions, 2), cfg.flink_tree_fanin))
         )
@@ -102,9 +114,21 @@ class FlinkHarness:
         b = self.idx[pid]
         self.idx[pid] += 1
         frac = float(self.valid_frac[pid, b])
-        self.consumer.count_events(
-            self.sim.now, int(round(frac * cfg.events_per_batch))
-        )
+        n_events = int(round(frac * cfg.events_per_batch))
+        self.consumer.count_events(self.sim.now, n_events)
+        proc = max(cfg.batch_proc_ms * frac, cfg.batch_proc_ms / cfg.events_per_batch)
+        if self.obs.on:
+            nid = self.node_of[pid]
+            queue_ms = self.sim.now - (b + 1) * cfg.batch_span_ms
+            self.obs.event(
+                "exec.batch", node=nid, partition=pid, status="ok",
+                t_end_ms=self.sim.now + proc, idx=b, queue_ms=queue_ms,
+            )
+            reg = self.obs.registry
+            reg.counter("batches_folded", node=nid).inc()
+            reg.counter("events_folded", node=nid).inc(n_events)
+            reg.histogram("phase_ms", phase="queue").observe(queue_ms)
+            reg.histogram("phase_ms", phase="process").observe(proc)
         # local watermark after this batch = end of batch span; a leaf
         # forwards every window whose assigner-provided end it has passed
         # (wid < first_dirty_wid(wm) — under tumbling, wm // window_len)
@@ -123,7 +147,6 @@ class FlinkHarness:
                     latency_ms=cfg.shuffle_hop_ms + BUFFER_TIMEOUT_MS,
                     hops=self.tree_depth,
                 )
-        proc = max(cfg.batch_proc_ms * frac, cfg.batch_proc_ms / cfg.events_per_batch)
         self.sim.after(proc, lambda: self._loop_part(pid))
 
     def _arrive(self, wid: int, pid: int):
@@ -133,7 +156,19 @@ class FlinkHarness:
         s.add(pid)
         if len(s) >= self.cfg.num_partitions and wid not in self.emitted:
             self.emitted.add(wid)
-            self.consumer.emit(self.sim.now, 0, wid, None)
+            fresh = self.consumer.emit(self.sim.now, 0, wid, None)
+            if self.obs.on:
+                # root emission: value digest is 0 — the modeled tree ships
+                # partials, not materialized values (latency is the metric)
+                self.obs.event(
+                    "emit", node=0, partition=0, window=wid,
+                    status="accepted" if fresh else "duplicate",
+                    latency_ms=max(
+                        0.0,
+                        self.sim.now - float(self.query.assigner.end_ts(wid)),
+                    ),
+                    digest=0,
+                )
 
     # ---- checkpoint barrier -------------------------------------------------
     def _loop_ckpt(self):
@@ -143,14 +178,26 @@ class FlinkHarness:
         if not self.down:
             self.last_ckpt_idx = list(self.idx)
             self.paused_until = self.sim.now + cfg.flink_barrier_pause_ms
+            if self.obs.on:
+                self.obs.event(
+                    "flink.barrier", node=0, t_end_ms=self.paused_until,
+                    frontier=tuple(self.last_ckpt_idx),
+                )
+                self.obs.registry.counter("ckpt_barriers").inc()
         self.sim.after(cfg.flink_ckpt_interval_ms, self._loop_ckpt)
 
     # ---- failure handling -----------------------------------------------------
     def fail_node(self, nid: int):
+        if self.obs.on:
+            # owned=() — centralized recovery has no per-partition steal, so
+            # the auditor tracks downtime via flink.down/flink.recover instead
+            self.obs.event("node.crash", node=nid, owned=())
         self.node_alive[nid] = False
         self.sim.after(self.cfg.flink_hb_timeout_ms, lambda: self._detect())
 
     def restart_node(self, nid: int):
+        if self.obs.on:
+            self.obs.event("node.restart", node=nid)
         self.node_alive[nid] = True
         if self.down and not self.job_dead:
             self._recover()
@@ -159,6 +206,8 @@ class FlinkHarness:
         if self.job_dead or self.down:
             return
         self.down = True
+        if self.obs.on:
+            self.obs.event("flink.down", node=0, status="node_failure")
         if all(self.node_alive) or self.cfg.flink_spare_slots:
             self._recover()
         # else: job stays down until a node restarts (or forever — Fig. 6)
@@ -181,6 +230,8 @@ class FlinkHarness:
         # but recovery cannot complete until the fabric heals
         if not self.job_dead and not self.down and self._jm_separated():
             self.down = True
+            if self.obs.on:
+                self.obs.event("flink.down", node=0, status="jm_partition")
 
     def _on_heal(self):
         self.net.heal()
@@ -198,6 +249,9 @@ class FlinkHarness:
             if self._jm_separated():
                 return  # still partitioned; the heal event retries recovery
             self.down = False
+            if self.obs.on:
+                self.obs.event("flink.recover", node=0,
+                               frontier=tuple(self.last_ckpt_idx))
             # spare slots: reassign dead nodes' partitions to live nodes
             live = [n for n in range(cfg.num_nodes) if self.node_alive[n]]
             for pid in range(cfg.num_partitions):
@@ -247,6 +301,7 @@ class FlinkHarness:
                     "only apply to the Holon runtime"
                 )
         horizon = horizon_ms if horizon_ms is not None else cfg.horizon_ms + 5000.0
+        self.obs.start_snapshots()
         self.sim.run(until=horizon)
         self.consumer.net_stats = self.net.class_stats()
         return self.consumer

@@ -55,6 +55,7 @@ fabric reproduces the pre-fabric event schedule bit-for-bit.
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Any, Iterable
 
 import jax
@@ -62,6 +63,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import wcrdt as W
+from repro.obs.telemetry import Telemetry
 from repro.runtime.config import FailureScenario, Scenario, SimConfig, as_scenario
 from repro.runtime.consumer import Consumer
 from repro.runtime.net import CTRL_BYTES, HB_BYTES, STORAGE, NetworkFabric
@@ -127,6 +129,13 @@ class HolonNode:
 
     # ---- lifecycle ---------------------------------------------------------
     def boot(self, initial_pids: list[int]):
+        obs = self.h.obs
+        if obs.on:
+            obs.event(
+                "node.boot", node=self.nid,
+                status="joiner" if self._bootstrap_pending else "member",
+                pids=tuple(sorted(initial_pids)), epoch=self.epoch,
+            )
         for pid in sorted(initial_pids):
             self._adopt(pid, ckpt=None)
         sim = self.h.sim
@@ -138,10 +147,17 @@ class HolonNode:
         self._broadcast_hb()
 
     def fail(self):
+        if self.h.obs.on:
+            # the owned-partition snapshot is what the auditor's
+            # recovery-bound invariant checks adoption against
+            self.h.obs.event("node.crash", node=self.nid, owned=tuple(self.owned))
         self.alive = False
 
     def restart(self):
         """Rejoin with empty volatile state; recover owned work from storage."""
+        if self.h.obs.on:
+            self.h.obs.event("node.restart", node=self.nid,
+                             generation=self.generation + 1)
         self.generation += 1
         self.alive = True
         self.owned = []
@@ -166,6 +182,8 @@ class HolonNode:
         reads a checkpoint at the exact input frontier (no replay)."""
         if not self.alive or self.departing:
             return
+        if self.h.obs.on:
+            self.h.obs.event("node.drain", node=self.nid, owned=tuple(self.owned))
         self.departing = True
         self._publish_sync()
         for pid in list(self.owned):
@@ -188,12 +206,34 @@ class HolonNode:
             if q.shared_specs:
                 self.replica = self.h.merge_fn(self.replica, ckpt.shared)
         self.owned = sorted(set(self.owned) | {pid})
+        if self.h.obs.on:
+            self.h.obs.registry.gauge("owned_partitions", node=self.nid).set(
+                len(self.owned)
+            )
 
     def _drop(self, pid: int):
         if pid in self.meta:
             self.owned.remove(pid)
             del self.meta[pid]
             del self.locals[pid]
+            if self.h.obs.on:
+                self.h.obs.registry.gauge("owned_partitions", node=self.nid).set(
+                    len(self.owned)
+                )
+
+    def _put_ckpt(self, pid: int, ck: PartitionCheckpoint):
+        """Ship one checkpoint over the retried storage tier, recording the
+        node-side request (the storage side records ``ckpt.apply`` with the
+        frontier that actually stuck — docs/observability.md §2)."""
+        if self.h.obs.on:
+            self.h.obs.event(
+                "ckpt.put", node=self.nid, partition=pid, nxt_idx=ck.nxt_idx,
+                emitted_upto=ck.emitted_upto, epoch=ck.epoch,
+            )
+        self.h.net.rpc(
+            self.nid, STORAGE, "ckpt_put", self.h.ckpt_nbytes,
+            lambda p=pid, c=ck: self.h.storage.put(p, c),
+        )
 
     def _handoff(self, pid: int):
         """Planned ownership release: put a checkpoint at the *current*
@@ -201,11 +241,10 @@ class HolonNode:
         replaying from the last periodic snapshot — this is what makes
         scale-in / rebalance nearly free relative to crash recovery."""
         m = self.meta[pid]
-        ck = self._checkpoint_of(pid, m)
-        self.h.net.rpc(
-            self.nid, STORAGE, "ckpt_put", self.h.ckpt_nbytes,
-            lambda p=pid, c=ck: self.h.storage.put(p, c),
-        )
+        if self.h.obs.on:
+            self.h.obs.event("part.handoff", node=self.nid, partition=pid,
+                             nxt_idx=m.idx)
+        self._put_ckpt(pid, self._checkpoint_of(pid, m))
         self._drop(pid)
 
     def _checkpoint_of(self, pid: int, m: PartitionMeta) -> PartitionCheckpoint:
@@ -318,11 +357,24 @@ class HolonNode:
             self.replica, self.locals[pid], batch, pid, m.idx
         )
         m.idx += 1
-        self.h.consumer.count_events(
-            self.h.sim.now, int(round(frac * cfg.events_per_batch))
-        )
+        n_events = int(round(frac * cfg.events_per_batch))
+        self.h.consumer.count_events(self.h.sim.now, n_events)
+        cost = max(cfg.batch_proc_ms * frac, cfg.batch_proc_ms / cfg.events_per_batch)
+        obs = self.h.obs
+        if obs.on:
+            now = self.h.sim.now
+            queue_ms = now - avail  # batch availability -> dequeue
+            obs.event(
+                "exec.batch", node=self.nid, partition=pid, status="ok",
+                t_end_ms=now + cost, idx=m.idx - 1, queue_ms=queue_ms,
+            )
+            reg = obs.registry
+            reg.counter("batches_folded", node=self.nid).inc()
+            reg.counter("events_folded", node=self.nid).inc(n_events)
+            reg.histogram("phase_ms", phase="queue").observe(queue_ms)
+            reg.histogram("phase_ms", phase="process").observe(cost)
         self._emit_ready(pid)
-        return max(cfg.batch_proc_ms * frac, cfg.batch_proc_ms / cfg.events_per_batch)
+        return cost
 
     def _emit_ready(self, pid: int):
         """Emit every window completed under the current global watermark.
@@ -335,6 +387,7 @@ class HolonNode:
         q = self.h.query
         m = self.meta[pid]
         gwm = int(q.global_watermark(self.replica, self.locals[pid]))
+        obs = self.h.obs
         while q.assigner.complete(m.emitted_upto, gwm):
             wid = m.emitted_upto
             val, ok = self.h.read_fn(self.replica, self.locals[pid], wid)
@@ -342,9 +395,24 @@ class HolonNode:
                 # complete but no longer ring-resident (emission lagged more
                 # than num_slots windows) — skip and count; sized-away in cfg
                 self.h.evicted_windows += 1
+                if obs.on:
+                    obs.event("emit", node=self.nid, partition=pid, window=wid,
+                              status="evicted")
                 m.emitted_upto = wid + 1
                 continue
-            self.h.consumer.emit(self.h.sim.now, pid, wid, np.asarray(val))
+            arr = np.asarray(val)
+            fresh = self.h.consumer.emit(self.h.sim.now, pid, wid, arr)
+            if obs.on:
+                # digest lets the auditor tell benign duplicates (same value,
+                # exactly-once by dedup) from genuine divergence
+                obs.event(
+                    "emit", node=self.nid, partition=pid, window=wid,
+                    status="accepted" if fresh else "duplicate",
+                    latency_ms=max(
+                        0.0, self.h.sim.now - float(q.assigner.end_ts(wid))
+                    ),
+                    digest=zlib.crc32(arr.tobytes()),
+                )
             m.odx += 1
             m.emitted_upto = wid + 1
 
@@ -360,13 +428,16 @@ class HolonNode:
             return
         snap = self.replica
         marker = self.h.marker_of(snap)
-        for other in self._peers():
+        peers = self._peers()
+        shipped_total = 0.0
+        for other in peers:
             if self.h.cfg.delta_sync:
                 base = self.peer_baseline.get(other.nid, self.h.zero_base)
                 payload = self.h.delta_fn(snap, base)
                 shipped = self.h.delta_bytes(payload)
             else:
                 base, payload, shipped = None, snap, self.h.full_state_bytes
+            shipped_total += shipped
             self.h.sync_bytes_full += self.h.full_state_bytes
             self.h.net.send(
                 self.nid, other.nid, "sync", shipped,
@@ -374,6 +445,14 @@ class HolonNode:
                     pay, self.nid, b, mk
                 ),
             )
+        obs = self.h.obs
+        if obs.on and peers:
+            obs.event(
+                "sync.publish", node=self.nid,
+                status="delta" if self.h.cfg.delta_sync else "full",
+                peers=tuple(o.nid for o in peers), shipped=shipped_total,
+            )
+            obs.registry.counter("sync_rounds", node=self.nid).inc()
 
     def _on_state_request(self, requester: int):
         """Serve a joiner's bootstrap: reply with the full replica and its
@@ -384,6 +463,9 @@ class HolonNode:
         snap = self.replica
         marker = self.h.marker_of(snap)
         self.h.bootstrap_served.append((requester, self.nid))
+        if self.h.obs.on:
+            self.h.obs.event("sync.bootstrap", node=self.nid, dst=requester,
+                             shipped=self.h.full_state_bytes)
         self.h.sync_bytes_full += self.h.full_state_bytes
         self.h.net.send(
             self.nid, requester, "sync", self.h.full_state_bytes,
@@ -395,11 +477,16 @@ class HolonNode:
     def _on_sync(self, snap, src: int | None = None, base=None, marker=None):
         if not self.alive:
             return
+        obs = self.h.obs
         if base is not None and not self._dominates(base):
             # our replica (e.g. freshly recovered from an older checkpoint)
             # does not cover the delta's baseline — applying it would lose
             # the gap.  Nack so the sender resets to a full-state round.
             self.h.sync_nacks += 1
+            if obs.on:
+                obs.event("sync.recv", node=self.nid, src=src, status="nack",
+                          dominated=0)
+                obs.registry.counter("sync_nacks", node=self.nid).inc()
             if src is not None:
                 self.h.net.send(
                     self.nid, src, "sync_nack", CTRL_BYTES,
@@ -407,6 +494,14 @@ class HolonNode:
                 )
             return
         self.replica = self.h.merge_fn(self.replica, snap)
+        if obs.on:
+            # recorded before the emit sweep so merge-then-emit causality
+            # reads in order; marker=1 iff an ack will go back this instant
+            obs.event(
+                "sync.recv", node=self.nid, src=src,
+                status="delta_merge" if base is not None else "full_merge",
+                dominated=1, marker=1 if marker is not None and src is not None else 0,
+            )
         # merged watermark may complete windows for our partitions
         for pid in self.owned:
             self._emit_ready(pid)
@@ -475,19 +570,22 @@ class HolonNode:
         # re-check assignment under the current view (node may have returned)
         if assignment(pid, self._live_view()) != self.nid:
             return
-        self._adopt(pid, self.h.storage.get(pid))
+        ck = self.h.storage.get(pid)
+        if self.h.obs.on:
+            self.h.obs.event(
+                "steal.adopt", node=self.nid, partition=pid,
+                status="ckpt" if ck is not None else "fresh",
+                nxt_idx=ck.nxt_idx if ck is not None else 0,
+            )
+        self._adopt(pid, ck)
 
     def _loop_ckpt(self, gen: int):
         if not self.alive or gen != self.generation:
             return
         for pid in list(self.owned):
-            ck = self._checkpoint_of(pid, self.meta[pid])
             # async durable write completes after one storage RTT; the RPC
             # tier re-issues lost legs (merge-on-put is idempotent)
-            self.h.net.rpc(
-                self.nid, STORAGE, "ckpt_put", self.h.ckpt_nbytes,
-                lambda p=pid, c=ck: self.h.storage.put(p, c),
-            )
+            self._put_ckpt(pid, self._checkpoint_of(pid, self.meta[pid]))
         self.h.sim.after(self.h.cfg.ckpt_interval_ms, lambda: self._loop_ckpt(gen))
 
 
@@ -509,12 +607,18 @@ class HolonHarness:
         # processing cost, so load skew translates into node load
         self.valid_frac = np.asarray(self._log_np.valid, np.float64).mean(axis=-1)
         self.sim = Sim()
+        # one telemetry hub per run (docs/observability.md): the fabric,
+        # storage, consumer, and every node record into the same bounded
+        # ring + registry, so exported traces interleave in causal order
+        self.obs = Telemetry.from_config(self.sim, cfg)
         # all inter-node and node<->storage delivery rides the fabric
         # (runtime/net.py, docs/protocol.md §4); the default profile is the
         # perfect wire, so fabric-off is not a mode — lossless IS the fabric
-        self.net = NetworkFabric.from_config(self.sim, cfg)
-        self.storage = CheckpointStorage()
-        self.consumer = Consumer(window_len=cfg.window_len, assigner=query.assigner)
+        self.net = NetworkFabric.from_config(self.sim, cfg, telemetry=self.obs)
+        self.storage = CheckpointStorage(telemetry=self.obs)
+        self.consumer = Consumer(
+            window_len=cfg.window_len, assigner=query.assigner, telemetry=self.obs
+        )
         self.evicted_windows = 0
         # jitted dataplane
         self.fold_fn = jax.jit(query.fold)
@@ -590,6 +694,12 @@ class HolonHarness:
         if not add and not remove:
             return
         self.membership_epoch += 1
+        if self.obs.on:
+            self.obs.event(
+                "ctrl.reconfigure", epoch=self.membership_epoch,
+                add=tuple(int(n) for n in add),
+                remove=tuple(int(n) for n in remove),
+            )
         # the reconfigure command rides the control plane: every live
         # subscriber learns the new epoch with the event (so a drain's
         # leaving beacon below already gossips it) — crashed nodes catch up
@@ -668,6 +778,7 @@ class HolonHarness:
                     ),
                 )
         horizon = horizon_ms if horizon_ms is not None else self.cfg.horizon_ms + 5000.0
+        self.obs.start_snapshots()
         self.sim.run(until=horizon)
         # expose sync-bandwidth + fabric counters on the consumer (probe)
         self.consumer.sync_msgs = self.sync_msgs

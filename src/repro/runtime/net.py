@@ -33,17 +33,27 @@ heal (a bootstrap request must survive the partition it was born into).
 
 Determinism: every random draw comes from a per-link ``random.Random``
 seeded by ``mix64(seed, src, dst)``, so (a) the same config+seed replays a
-byte-identical delivery ``trace`` (recorded when ``SimConfig.net_trace``
-is set — off by default so long runs don't retain per-message tuples),
-and (b) traffic on one link never perturbs another link's draws.  A lossless zero-jitter profile makes *no*
+byte-identical delivery ``trace``, and (b) traffic on one link never
+perturbs another link's draws.  A lossless zero-jitter profile makes *no*
 RNG draws at all and schedules exactly one simulator event per message at
 ``latency_ms`` — the pre-fabric wire, preserved bit-for-bit.
+
+Delivery records are typed :class:`~repro.obs.records.TraceEvent`s
+(``kind="net.msg"``) in the harness telemetry's bounded ring buffer
+(docs/observability.md §2) — recorded when ``SimConfig.net_trace`` or
+``obs`` is set, off by default so long chaos sweeps don't retain
+per-message state, and bounded either way so they can't grow memory
+without bound.  Recording is passive: it never draws RNG or schedules
+events, so the lossless-profile bit-for-bit guarantee holds with tracing
+on or off.
 """
 from __future__ import annotations
 
 import dataclasses
 import random
 from typing import Callable, Hashable, Iterable
+
+from repro.obs.telemetry import Telemetry
 
 # the durable checkpoint service rides the fabric as a distinguished
 # endpoint: always reachable (it is not a cluster member), with its own
@@ -120,9 +130,11 @@ class NetworkFabric:
     """
 
     @classmethod
-    def from_config(cls, sim, cfg) -> "NetworkFabric":
+    def from_config(cls, sim, cfg, telemetry: Telemetry | None = None) -> "NetworkFabric":
         """The one place SimConfig's net knobs become link profiles — both
-        runtimes build their fabric here, so they cannot drift apart."""
+        runtimes build their fabric here, so they cannot drift apart.
+        ``telemetry`` shares the harness's trace buffer so net records and
+        protocol spans land in one time-ordered stream."""
         return cls(
             sim,
             profile=LinkProfile(
@@ -140,6 +152,7 @@ class NetworkFabric:
             rto_ms=cfg.net_rto_ms,
             retry_ms=cfg.storage_retry_ms,
             record_trace=cfg.net_trace,
+            telemetry=telemetry,
         )
 
     def __init__(
@@ -151,6 +164,7 @@ class NetworkFabric:
         rto_ms: float = 200.0,
         retry_ms: float = 100.0,
         record_trace: bool = False,
+        telemetry: Telemetry | None = None,
     ):
         self.sim = sim
         self.profile = profile if profile is not None else LinkProfile()
@@ -162,7 +176,15 @@ class NetworkFabric:
         self.seed = int(seed)
         self.rto_ms = float(rto_ms)
         self.retry_ms = float(retry_ms)
-        self.record_trace = record_trace
+        # shared harness telemetry, or a standalone one for bare fabrics;
+        # record_trace=True enables its net-record stream either way
+        self.telemetry = (
+            telemetry
+            if telemetry is not None
+            else Telemetry(sim, trace_net=record_trace)
+        )
+        if record_trace:
+            self.telemetry.trace_net = True
         self.groups: tuple[frozenset, ...] | None = None
         self._degraded: dict[Hashable, dict] = {}
         self._rngs: dict[tuple[int, int], random.Random] = {}
@@ -171,9 +193,19 @@ class NetworkFabric:
         # parked reliable messages, re-sent on heal: (src, dst, cls, nbytes,
         # deliver, latency_ms, hops)
         self._parked: list[tuple] = []
-        # delivery trace: (t_send, src, dst, cls, nbytes, status, t_deliver);
-        # t_deliver is -1.0 for messages that were never delivered
-        self.trace: list[tuple] = []
+        # per-class histogram cache: skips the registry's key-string build on
+        # every delivery (the fabric is the hottest telemetry call site)
+        self._delay_hists: dict[str, object] = {}
+
+    @property
+    def record_trace(self) -> bool:
+        return self.telemetry.trace_net
+
+    @property
+    def trace(self) -> list:
+        """Typed per-message delivery records (``TraceEvent``, kind
+        ``net.msg``), oldest-first, from the bounded telemetry ring."""
+        return self.telemetry.net_events()
 
     # ---- topology control --------------------------------------------------
     def set_partition(self, *groups: Iterable[Hashable]) -> None:
@@ -181,10 +213,14 @@ class NetworkFabric:
         Nodes listed in no group form one implicit residual side; STORAGE
         stays reachable from everyone (it is a service, not a member)."""
         self.groups = tuple(frozenset(g) for g in groups)
+        self.telemetry.event(
+            "net.partition", groups=tuple(tuple(sorted(g)) for g in self.groups)
+        )
 
     def heal(self) -> None:
         """Remove the partition and flush parked reliable messages (they
         deliver after a freshly sampled latency from heal time)."""
+        self.telemetry.event("net.heal", parked=len(self._parked))
         self.groups = None
         parked, self._parked = self._parked, []
         for src, dst, cls, nbytes, deliver, latency_ms, hops in parked:
@@ -231,6 +267,10 @@ class NetworkFabric:
         # distribution; default to uniform so the knob has an effect
         if jitter_ms is not None and jitter is None and self.profile.jitter == "fixed":
             fields["jitter"] = "uniform"
+        self.telemetry.event(
+            "net.degrade", nodes=tuple(sorted(_endpoint_id(n) for n in nodes)),
+            status="set" if fields else "clear",
+        )
         for n in nodes:
             if fields:
                 self._degraded[n] = {**self._degraded.get(n, {}), **fields}
@@ -298,8 +338,18 @@ class NetworkFabric:
         return st
 
     def _record(self, src, dst, cls, nbytes, status, t_deliver=-1.0):
-        if self.record_trace:
-            self.trace.append((self.sim.now, src, dst, cls, nbytes, status, t_deliver))
+        self.telemetry.net_msg(src, dst, cls, nbytes, status, t_deliver)
+
+    def _observe_delay(self, cls: str, delay: float) -> None:
+        """Per-class delivery-latency histogram — the wire-time slice of the
+        per-phase breakdown (e.g. ``net_delivery_ms{cls=sync}`` is the sync
+        phase's transport cost, docs/observability.md §1)."""
+        if self.telemetry.on:
+            h = self._delay_hists.get(cls)
+            if h is None:
+                h = self._delay_hists[cls] = self.telemetry.registry.histogram(
+                    "net_delivery_ms", cls=cls)
+            h.observe(delay)
 
     def msgs_of(self, cls: str) -> int:
         return self.stats[cls].msgs if cls in self.stats else 0
@@ -342,6 +392,7 @@ class NetworkFabric:
             return False
         delay = self._sample_latency(prof, rng, latency_ms, self._lat_floor(src, dst))
         self._record(src, dst, cls, nbytes, "ok", self.sim.now + delay)
+        self._observe_delay(cls, delay)
         self.sim.after(delay, deliver)
         return True
 
@@ -377,6 +428,7 @@ class NetworkFabric:
         st = self._meter(src, dst, cls, nbytes * (1 + retries))
         st.retries += retries
         self._record(src, dst, cls, nbytes, "ok", self.sim.now + delay)
+        self._observe_delay(cls, delay)
         self.sim.after(delay, deliver)
 
     def rpc(
@@ -415,6 +467,7 @@ class NetworkFabric:
                 prof, rng, latency_ms, self._lat_floor(src, dst)
             )
             self._record(src, dst, cls, nbytes, "ok", self.sim.now + delay)
+            self._observe_delay(cls, delay)
             self.sim.after(delay, execute)
 
         attempt(max_tries)

@@ -10,6 +10,12 @@ All access rides the network fabric's retried request-response tier
 (docs/protocol.md §4): the service itself is synchronous and durable;
 latency, loss, and retries live on the node↔storage links, and the lattice
 rule is exactly what makes re-issued puts harmless.
+
+With telemetry attached (docs/observability.md §2) the store records one
+``ckpt.apply`` per put — carrying the *resulting* stored frontier, which is
+what the auditor's monotone-frontier invariant checks: put *requests* may
+arrive out of order, the applied frontier may never regress — and one
+``ckpt.get`` per fetch (hit/miss + the recovered frontier).
 """
 from __future__ import annotations
 
@@ -45,10 +51,11 @@ def _coverage(ckpt: PartitionCheckpoint) -> float:
 
 
 class CheckpointStorage:
-    def __init__(self):
+    def __init__(self, telemetry=None):
         self._data: dict[int, PartitionCheckpoint] = {}
         self.puts = 0
         self.gets = 0
+        self.obs = telemetry  # Telemetry or None (docs/observability.md §2)
 
     def put(self, pid: int, ckpt: PartitionCheckpoint) -> None:
         self.puts += 1
@@ -56,15 +63,32 @@ class CheckpointStorage:
         # Algorithm 2: lattice merge keeps the state with the largest nxtIdx;
         # ties broken by delta-sync coverage (richer gossip wins, so recovery
         # replays the fewest deltas), then by membership epoch (newer view).
-        if cur is None or (
+        applied = cur is None or (
             (ckpt.nxt_idx, _coverage(ckpt), ckpt.epoch)
             >= (cur.nxt_idx, _coverage(cur), cur.epoch)
-        ):
+        )
+        if applied:
             self._data[pid] = ckpt
+        if self.obs is not None and self.obs.on:
+            stored = self._data[pid]
+            self.obs.event(
+                "ckpt.apply", node="storage", partition=pid,
+                status="applied" if applied else "kept",
+                nxt_idx=stored.nxt_idx, epoch=stored.epoch,
+            )
+            self.obs.registry.counter("ckpt_puts", partition=pid).inc()
 
     def get(self, pid: int) -> PartitionCheckpoint | None:
         self.gets += 1
-        return self._data.get(pid)
+        ck = self._data.get(pid)
+        if self.obs is not None and self.obs.on:
+            self.obs.event(
+                "ckpt.get", node="storage", partition=pid,
+                status="hit" if ck is not None else "miss",
+                nxt_idx=ck.nxt_idx if ck is not None else -1,
+            )
+            self.obs.registry.counter("ckpt_gets", partition=pid).inc()
+        return ck
 
     def has(self, pid: int) -> bool:
         return pid in self._data

@@ -1,0 +1,316 @@
+"""Observability-layer tests (src/repro/obs, docs/observability.md).
+
+Four layers:
+
+* unit — trace ring bounding + dropped accounting, registry determinism,
+  histogram bucket math, the two exporters' formats (JSONL header/ordering,
+  Chrome trace-event schema), clock-domain timers;
+* determinism — same-seed runs export byte-identical JSONL/Chrome traces
+  (both runtimes, including a crash + partition chaos scenario on lossy
+  jittered links), and telemetry on vs off leaves the run's outputs
+  untouched;
+* auditor-pass — the auditor certifies every tier-1 scenario family
+  (baseline, concurrent/subsequent/crash failures, partition + heal,
+  elastic scale out/in) on both runtimes;
+* auditor-mutation — seeded violations (duplicate emission, checkpoint
+  frontier regression, un-acked merge, non-dominated merge, truncated
+  ring) are each flagged with the right violation id: the auditor is
+  tested to *fail*, not just to pass.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.obs.audit import audit, audit_harness
+from repro.obs.records import TraceBuffer, TraceEvent, mkargs, to_chrome, to_jsonl
+from repro.obs.registry import MetricsRegistry, summary
+from repro.obs.telemetry import Telemetry
+from repro.obs.timing import SimTimer, WallTimer
+from repro.runtime import (
+    FailureScenario,
+    FlinkHarness,
+    HolonHarness,
+    Scenario,
+    SimConfig,
+)
+from repro.runtime.sim import Sim
+from repro.streaming import make_q7
+
+CFG = SimConfig(
+    num_nodes=3, num_partitions=4, num_batches=60, window_len=500,
+    sync_interval_ms=50.0, ckpt_interval_ms=300.0, obs=True,
+)
+HORIZON = CFG.horizon_ms + 10_000.0
+
+
+def _q(cfg=CFG):
+    return make_q7(cfg.num_partitions, window_len=cfg.window_len,
+                   num_slots=cfg.num_slots)
+
+
+def _run(cfg=CFG, scenario=None, harness_cls=HolonHarness, horizon=HORIZON):
+    h = harness_cls(cfg, _q(cfg))
+    h.run(scenario, horizon_ms=horizon)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# unit: records, ring, registry, timers, exporters
+# ---------------------------------------------------------------------------
+class TestRecords:
+    def test_ring_bounds_and_dropped(self):
+        buf = TraceBuffer(cap=8)
+        for i in range(20):
+            buf.append(TraceEvent(t_ms=float(i), kind="x"))
+        assert len(buf.events()) == 8
+        assert buf.total == 20
+        assert buf.dropped == 12
+        # oldest evicted: remaining records are the 8 newest
+        assert [e.t_ms for e in buf.events()] == [float(i) for i in range(12, 20)]
+
+    def test_mkargs_sorted_and_event_equality(self):
+        assert mkargs(b=1, a=2) == (("a", 2), ("b", 1))
+        e1 = TraceEvent(t_ms=1.0, kind="k", args=mkargs(x=1))
+        e2 = TraceEvent(t_ms=1.0, kind="k", args=mkargs(x=1))
+        assert e1 == e2 and e1.arg("x") == 1 and e1.arg("missing", 9) == 9
+
+    def test_jsonl_header_and_order(self):
+        buf = TraceBuffer(cap=4)
+        buf.append(TraceEvent(t_ms=2.0, kind="b"))
+        buf.append(TraceEvent(t_ms=1.0, kind="a"))
+        out = to_jsonl(buf.events(), dropped=buf.dropped).splitlines()
+        head = json.loads(out[0])
+        assert head["meta"] == "holon-trace-v1" and head["dropped"] == 0
+        # records come out in recording order, keys sorted inside each line
+        assert json.loads(out[1])["kind"] == "b"
+        assert list(json.loads(out[2])) == sorted(json.loads(out[2]))
+
+    def test_chrome_span_vs_instant(self):
+        evs = [
+            TraceEvent(t_ms=1.0, kind="exec.batch", node=0, partition=2,
+                       t_end_ms=3.0),
+            TraceEvent(t_ms=4.0, kind="node.crash", node=1),
+        ]
+        doc = to_chrome(evs)
+        by_ph = {e["ph"]: e for e in doc["traceEvents"] if e["ph"] in "Xi"}
+        assert by_ph["X"]["dur"] == pytest.approx(2000.0)  # ms -> us
+        assert by_ph["X"]["ts"] == pytest.approx(1000.0)
+        assert by_ph["i"]["pid"] == 1
+        assert doc["displayTimeUnit"] == "ms"
+
+    def test_registry_key_sorted_and_histogram(self):
+        reg = MetricsRegistry()
+        reg.counter("c", node=2).inc(3)
+        reg.counter("c", node=1).inc()
+        h = reg.histogram("lat", phase="emit")
+        for v in (0.5, 3.0, 100.0):
+            h.observe(v)
+        got = reg.collect()
+        assert list(got) == sorted(got)
+        assert got["c{node=1}"] == 1 and got["c{node=2}"] == 3
+        assert h.count == 3 and h.max == 100.0 and h.min == 0.5
+        assert h.percentile(99) <= h.max
+        assert reg.histograms("lat") == {"lat{phase=emit}": h}
+
+    def test_snapshot_series_on_sim_time(self):
+        sim = Sim()
+        tel = Telemetry(sim, on=True, snapshot_ms=10.0)
+        tel.registry.counter("n").inc()
+        tel.start_snapshots()
+        sim.run(until=35.0)
+        assert [t for t, _ in tel.registry.series] == [10.0, 20.0, 30.0]
+        assert all(vals["n"] == 1 for _, vals in tel.registry.series)
+
+    def test_summary_shared_keys(self):
+        s = summary([1.0, 2.0, 3.0])
+        assert set(s) == {"avg", "p50", "p99", "max", "n"}
+        assert s["avg"] == pytest.approx(2.0) and s["n"] == 3
+
+    def test_timers_domains(self):
+        with WallTimer() as wt:
+            pass
+        assert wt.domain == "wall" and wt.dt >= 0.0
+        sim = Sim()
+        st = SimTimer(sim)
+        with st:
+            sim.after(5.0, lambda: None)
+            sim.run(until=10.0)
+        assert st.domain == "sim" and st.dt_ms == pytest.approx(10.0)
+
+    def test_telemetry_off_records_nothing(self):
+        sim = Sim()
+        tel = Telemetry(sim)  # both switches off
+        tel.event("emit", node=0)
+        tel.net_msg(0, 1, "sync", 10.0, "ok")
+        tel.start_snapshots()
+        sim.run(until=2000.0)
+        assert tel.buf.total == 0 and tel.registry.series == []
+
+
+# ---------------------------------------------------------------------------
+# determinism: byte-identical exports, on/off run-equivalence
+# ---------------------------------------------------------------------------
+CHAOS_CFG = dataclasses.replace(
+    CFG, net_loss=0.05, net_jitter="uniform", net_jitter_ms=3.0
+)
+CHAOS_SCEN = (
+    Scenario("crash_and_partition")
+    .crash(1500.0, 0)
+    .partition(2500.0, (1,), (2,))
+    .heal(4000.0)
+    .restart(4500.0, 0)
+)
+
+
+class TestDeterminism:
+    @pytest.mark.parametrize("harness_cls", [HolonHarness, FlinkHarness])
+    def test_same_seed_byte_identical_exports(self, harness_cls):
+        h1 = _run(CHAOS_CFG, CHAOS_SCEN, harness_cls)
+        h2 = _run(CHAOS_CFG, CHAOS_SCEN, harness_cls)
+        assert h1.obs.buf.total > 0
+        assert h1.obs.export_jsonl() == h2.obs.export_jsonl()
+        assert json.dumps(h1.obs.export_chrome()) == json.dumps(
+            h2.obs.export_chrome()
+        )
+
+    @pytest.mark.parametrize("harness_cls", [HolonHarness, FlinkHarness])
+    def test_telemetry_does_not_perturb_run(self, harness_cls):
+        off = dataclasses.replace(CHAOS_CFG, obs=False)
+        h_on = _run(CHAOS_CFG, CHAOS_SCEN, harness_cls)
+        h_off = _run(off, CHAOS_SCEN, harness_cls)
+        assert h_off.obs.buf.total == 0
+        c_on, c_off = h_on.consumer, h_off.consumer
+        assert sorted(c_on.records) == sorted(c_off.records)
+        for k in c_on.records:
+            a, b = c_on.records[k], c_off.records[k]
+            assert a.emit_time == b.emit_time and a.latency == b.latency
+            if a.value is not None:
+                assert np.array_equal(np.asarray(a.value), np.asarray(b.value))
+        assert c_on.latency_stats() == c_off.latency_stats()
+
+    def test_net_trace_equality_still_holds(self):
+        # the PR-5 contract: fabric traces of same-seed runs compare equal
+        cfg = dataclasses.replace(CHAOS_CFG, obs=False, net_trace=True)
+        h1 = _run(cfg, CHAOS_SCEN)
+        h2 = _run(cfg, CHAOS_SCEN)
+        assert h1.net.trace and h1.net.trace == h2.net.trace
+
+
+# ---------------------------------------------------------------------------
+# auditor passes every tier-1 scenario family
+# ---------------------------------------------------------------------------
+SCENARIOS = {
+    "baseline": None,
+    "concurrent": FailureScenario.concurrent(t=2000.0),
+    "subsequent": FailureScenario.subsequent(t=1500.0),
+    "crash": FailureScenario.crash(t=2000.0),
+    "partition_heal": Scenario("ph").partition(2000.0, (0,), (1, 2)).heal(3500.0),
+    "elastic": Scenario("el").scale_out(2000.0, 3).scale_in(4000.0, 3),
+}
+
+
+class TestAuditorPasses:
+    @pytest.mark.parametrize("name", sorted(SCENARIOS))
+    def test_holon_clean(self, name):
+        h = _run(scenario=SCENARIOS[name])
+        rep = audit_harness(h)
+        assert rep.ok, f"{name}: {rep}"
+        assert rep.metrics["windows_accepted"] > 0
+
+    @pytest.mark.parametrize("name", ["baseline", "concurrent", "partition_heal"])
+    def test_flink_clean(self, name):
+        h = _run(scenario=SCENARIOS[name], harness_cls=FlinkHarness)
+        rep = audit_harness(h)
+        assert rep.ok, f"{name}: {rep}"
+
+    def test_recovery_metrics_extracted(self):
+        h = _run(scenario=SCENARIOS["crash"])
+        rep = audit_harness(h)
+        ttr = rep.metrics["time_to_recover_ms"]
+        bound = (CFG.hb_timeout_ms + 2 * CFG.hb_interval_ms + CFG.steal_delay_ms
+                 + 2 * CFG.storage_rtt_ms + 250.0)
+        assert ttr and all(0.0 < t <= bound for t in ttr.values())
+
+    def test_flink_downtime_extracted(self):
+        h = _run(scenario=SCENARIOS["concurrent"], harness_cls=FlinkHarness)
+        rep = audit_harness(h)
+        assert "flink_downtime_ms" in rep.metrics
+
+
+# ---------------------------------------------------------------------------
+# auditor mutation: seeded violations are each flagged
+# ---------------------------------------------------------------------------
+def _clean_events():
+    h = _run(scenario=SCENARIOS["concurrent"])
+    rep = audit_harness(h)
+    assert rep.ok
+    return list(h.obs.buf.events()), h.cfg
+
+
+def _violations(events, cfg):
+    return audit(events, cfg=cfg).violations
+
+
+class TestAuditorMutations:
+    def test_duplicate_emission_flagged(self):
+        evs, cfg = _clean_events()
+        first = next(e for e in evs if e.kind == "emit" and e.status == "accepted")
+        evs.append(dataclasses.replace(first, t_ms=first.t_ms + 1.0))
+        v = _violations(evs, cfg)
+        assert any("[exactly-once]" in s and "accepted twice" in s for s in v)
+
+    def test_divergent_duplicate_digest_flagged(self):
+        evs, cfg = _clean_events()
+        first = next(e for e in evs if e.kind == "emit" and e.status == "accepted")
+        evs.append(dataclasses.replace(
+            first, t_ms=first.t_ms + 1.0, status="duplicate",
+            args=mkargs(digest=12345, latency_ms=0.0),
+        ))
+        v = _violations(evs, cfg)
+        assert any("different value digest" in s for s in v)
+
+    def test_frontier_regression_flagged(self):
+        evs, cfg = _clean_events()
+        applies = [e for e in evs if e.kind == "ckpt.apply"]
+        last = max(applies, key=lambda e: (e.t_ms, e.arg("nxt_idx", 0)))
+        evs.append(dataclasses.replace(
+            last, t_ms=last.t_ms + 1.0, args=mkargs(nxt_idx=0, epoch=0),
+        ))
+        v = _violations(evs, cfg)
+        assert any("[frontier-regression]" in s for s in v)
+
+    def test_unacked_merge_flagged(self):
+        evs, cfg = _clean_events()
+        merge = next(e for e in evs
+                     if e.kind == "sync.recv" and e.status == "delta_merge"
+                     and e.arg("marker"))
+        # a merge claiming a marker at an instant with no fabric ack record
+        evs.append(dataclasses.replace(merge, t_ms=merge.t_ms + 0.123))
+        v = _violations(evs, cfg)
+        assert any("[unacked-merge]" in s for s in v)
+
+    def test_non_dominated_merge_flagged(self):
+        evs, cfg = _clean_events()
+        merge = next(e for e in evs
+                     if e.kind == "sync.recv" and e.status == "delta_merge")
+        evs.append(dataclasses.replace(
+            merge, t_ms=merge.t_ms + 0.125, args=mkargs(dominated=0, marker=0),
+        ))
+        v = _violations(evs, cfg)
+        assert any("[domination]" in s for s in v)
+
+    def test_truncated_ring_refused(self):
+        evs, cfg = _clean_events()
+        rep = audit(evs, cfg=cfg, dropped=7)
+        assert not rep.ok
+        assert any("[truncated]" in s for s in rep.violations)
+
+    def test_clean_trace_stays_clean(self):
+        # the mutation helpers start from a certified trace — pin that the
+        # unmutated copy audits ok through the same path
+        evs, cfg = _clean_events()
+        assert audit(evs, cfg=cfg).ok
