@@ -2,10 +2,10 @@
 
 Prints ``name,us_per_call,derived`` CSV lines and writes the same rows as
 machine-readable JSON (``{"sections": {section: [row, ...]}}``) to
-``BENCH_pr6.json`` so the perf trajectory accumulates across PRs.  Sections:
+``BENCH_pr7.json`` so the perf trajectory accumulates across PRs.  Sections:
   fig6_table2   failure recovery latency (Holon vs Flink-like)
   fig7_8        latency sensitivity under failures
-  fig9          scalability with cluster size
+  scalability   sync traffic + latency vs cluster size per gossip topology
   elasticity    4→8→4 elastic transitions vs stop-the-world rebalance
   chaos         lossy/partitioned/jittered network fabric (Holon vs Flink)
   obs           per-phase latency breakdown + trace-audited recovery
@@ -27,7 +27,7 @@ import sys
 import traceback
 from pathlib import Path
 
-BENCH_JSON = Path(__file__).resolve().parents[1] / "BENCH_pr6.json"
+BENCH_JSON = Path(__file__).resolve().parents[1] / "BENCH_pr7.json"
 
 
 def main() -> None:
@@ -59,7 +59,7 @@ def main() -> None:
         "throughput": throughput.main,
         "fig6_table2": failure_recovery.main,
         "fig7_8": sensitivity.main,
-        "fig9": scalability.main,
+        "scalability": scalability.main,
         "elasticity": lambda quick: elasticity.main(
             quick=quick, trace_out=args.trace_out
         ),

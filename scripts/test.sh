@@ -5,6 +5,7 @@
 #   scripts/test.sh slow       # the slow suite only
 #   scripts/test.sh multidevice  # multi-device suite under 8 virtual devices
 #   scripts/test.sh chaos      # network-fabric loss/partition sweeps
+#   scripts/test.sh topo       # fast dissemination-topology suite only
 #   scripts/test.sh obs        # telemetry smoke: export + audit a chaos run
 #   scripts/test.sh all        # tier-1, then slow, multidevice, chaos, obs
 set -euo pipefail
@@ -28,6 +29,11 @@ tier1() {
 }
 slow() { python -m pytest -q -m slow "$@"; }
 chaos() { python -m pytest -q -m chaos "$@"; }
+# topology schedule laws + sparse-vs-oracle convergence (tests/test_topology.py);
+# already part of tier-1 — this target is the quick loop while iterating on the
+# gossip plane.  The 64/256-node sweeps there are chaos-marked and run with
+# `scripts/test.sh chaos`.
+topo() { python -m pytest -q -m "not chaos" tests/test_topology.py "$@"; }
 obs() {
   # end-to-end telemetry gate: export traces from a small lossy chaos run,
   # audit the protocol invariants, validate the Chrome trace-event schema
@@ -42,8 +48,9 @@ case "${1:-tier1}" in
   tier1) tier1 "${@:2}" ;;
   slow) slow "${@:2}" ;;
   chaos) chaos "${@:2}" ;;
+  topo) topo "${@:2}" ;;
   obs) obs ;;
   multidevice) multidevice "${@:2}" ;;
   all) tier1 "${@:2}"; slow "${@:2}"; multidevice "${@:2}"; chaos "${@:2}"; obs ;;
-  *) echo "usage: $0 [tier1|slow|chaos|multidevice|all|obs]" >&2; exit 2 ;;
+  *) echo "usage: $0 [tier1|slow|chaos|topo|multidevice|all|obs]" >&2; exit 2 ;;
 esac

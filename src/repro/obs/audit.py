@@ -24,7 +24,10 @@ Invariants (violation ids in brackets):
 * **[recovery-bound]** — after a crash, every partition the dead node owned
   is re-adopted by a live node within detection + steal + fetch time
   (requires ``cfg``; crashes overlapping a network partition are exempt —
-  recovery then legitimately waits for storage/steal races to settle).
+  recovery then legitimately waits for storage/steal races to settle, and
+  partitions a live node *already* co-owned at crash time need no
+  re-adoption — sparse dissemination topologies, docs/protocol.md §5, can
+  transiently duplicate ownership, which consumer dedup makes benign).
 * **[truncated]** — the ring buffer dropped records: the auditor refuses to
   certify invariants it could not see.
 
@@ -174,6 +177,37 @@ def audit(
     # ---- [recovery-bound] + time-to-recover --------------------------------
     part_spans = _fault_windows(evs)
     adopts = [e for e in evs if e.kind == "steal.adopt"]
+    # Ownership replay: under a sparse dissemination topology
+    # (docs/protocol.md §5) a node's partial early view can make it adopt a
+    # partition whose rendezvous owner is alive elsewhere — the partition is
+    # then held (and processed) by both until the duplicate is handed off.
+    # If the duplicating node crashes, no re-adoption is needed: the live
+    # owner never stopped.  Replay boot/adopt/handoff/drain to know, at each
+    # crash, which of the dead node's partitions were already live-covered.
+    owners: dict[int, set] = defaultdict(set)
+    alive: set = set()
+    covered_at_crash: dict[int, set] = {}  # id(crash event) -> covered pids
+    for e in evs:
+        if e.kind == "node.boot":
+            alive.add(e.node)
+            for pid in e.arg("pids", ()):
+                owners[int(pid)].add(e.node)
+        elif e.kind == "steal.adopt":
+            owners[e.partition].add(e.node)
+        elif e.kind == "part.handoff":
+            owners[e.partition].discard(e.node)
+        elif e.kind == "node.drain":
+            alive.discard(e.node)
+            for pid in e.arg("owned", ()):
+                owners[int(pid)].discard(e.node)
+        elif e.kind == "node.crash":
+            alive.discard(e.node)
+            covered_at_crash[id(e)] = {
+                int(pid) for pid in e.arg("owned", ())
+                if owners[int(pid)] & alive
+            }
+            for pid in e.arg("owned", ()):
+                owners[int(pid)].discard(e.node)
     ttr: dict[int, float] = {}
     for e in evs:
         if e.kind != "node.crash":
@@ -191,6 +225,11 @@ def audit(
         deadline = e.t_ms + bound
         last = e.t_ms
         for pid in owned:
+            if int(pid) in covered_at_crash.get(id(e), ()):
+                # a live node already held this partition at crash time
+                # (duplicate ownership from a sparse-view steal) — recovery
+                # is instantaneous, nothing to re-adopt
+                continue
             took = [a for a in adopts
                     if a.partition == pid and a.t_ms > e.t_ms and a.node != e.node]
             if not took:

@@ -20,6 +20,14 @@ from repro.runtime.net import LinkProfile, NetworkFabric
 from repro.runtime.storage import CheckpointStorage
 from repro.runtime.harness import HolonHarness, assignment, run_holon
 from repro.runtime.flink_baseline import FlinkHarness, run_flink
+from repro.runtime.topology import (
+    AllToAll,
+    EpochRing,
+    Hypercube,
+    PartialView,
+    Topology,
+    topology_from_spec,
+)
 
 __all__ = [
     "SimConfig",
@@ -36,4 +44,10 @@ __all__ = [
     "run_holon",
     "FlinkHarness",
     "run_flink",
+    "Topology",
+    "AllToAll",
+    "EpochRing",
+    "Hypercube",
+    "PartialView",
+    "topology_from_spec",
 ]

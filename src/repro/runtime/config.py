@@ -31,6 +31,16 @@ class SimConfig:
     # --- Holon decentralized coordination (paper §4) ---
     delta_sync: bool = True  # ship delta_since(peer baseline), not replicas
     sync_interval_ms: float = 100.0  # background CRDT broadcast period
+    # dissemination topology of the gossip plane (docs/protocol.md §5):
+    # "all" (oracle, O(N^2) msgs/round) | "ring[:k]" | "hypercube" |
+    # "partial[:fanout]" — sparse graphs trade propagation hops for
+    # sub-quadratic sync traffic, never correctness (runtime/topology.py)
+    topology: str = "all"
+    # age out per-peer ack baselines not refreshed within this window (an
+    # aged-out peer falls back to zero_base, i.e. one full-state round);
+    # 0 disables aging — baselines are always *valid*, aging only bounds
+    # staleness/memory under sparse fanout (docs/protocol.md §5)
+    baseline_ttl_ms: float = 0.0
     broadcast_delay_ms: float = 5.0  # one-way broadcast-stream latency
     hb_interval_ms: float = 250.0  # decentralized liveness beacon
     hb_timeout_ms: float = 1000.0  # peer declared failed after this silence

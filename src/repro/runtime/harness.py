@@ -16,17 +16,25 @@ Every node runs four independent loops (no global coordination anywhere):
                and the next round ships the full resident state.  With
                ``cfg.delta_sync=False`` the loop broadcasts whole replicas
                (the paper's original protocol, kept for comparison).
+               *Which* peers a round contacts is the pluggable dissemination
+               topology (``cfg.topology``, runtime/topology.py): the
+               all-to-all oracle, or a sparse graph — rotating k-ring,
+               hypercube, seeded partial view — whose multi-hop relay keeps
+               outputs byte-identical at sub-quadratic per-round traffic
+               (docs/protocol.md §5).
                Message-sequence walkthrough: docs/protocol.md §2.
   checkpoint : every ``ckpt_interval`` put each owned partition's
                (nxt_idx, nxt_odx, emitted_upto, replica, local) to storage —
                unsynchronized, local decision ("sometimes do").  Snapshots
                carry their delta-coverage baseline and the membership epoch.
   control    : heartbeat peers (beacons carry the membership epoch; a
-               ``leaving`` beacon announces graceful departure); on silence
-               > ``hb_timeout`` — or on a leaving beacon — recompute the
-               deterministic rendezvous assignment over the live membership
-               and *steal* orphaned partitions by fetching their checkpoints
-               (Recover).  Walkthrough: docs/protocol.md §3.
+               ``leaving`` beacon announces graceful departure; under a
+               sparse topology they also piggyback a bounded liveness
+               digest, so sightings spread transitively — docs/protocol.md
+               §5); on silence > ``hb_timeout`` — or on a leaving beacon —
+               recompute the deterministic rendezvous assignment over the
+               live membership and *steal* orphaned partitions by fetching
+               their checkpoints (Recover).  Walkthrough: docs/protocol.md §3.
 
 Membership is fully dynamic: ``HolonHarness.reconfigure(add=…, remove=…)`` is
 the operator control-plane event.  New nodes bootstrap by requesting a
@@ -66,8 +74,15 @@ from repro.core import wcrdt as W
 from repro.obs.telemetry import Telemetry
 from repro.runtime.config import FailureScenario, Scenario, SimConfig, as_scenario
 from repro.runtime.consumer import Consumer
-from repro.runtime.net import CTRL_BYTES, HB_BYTES, STORAGE, NetworkFabric
+from repro.runtime.net import (
+    CTRL_BYTES,
+    GOSSIP_ENTRY_BYTES,
+    HB_BYTES,
+    STORAGE,
+    NetworkFabric,
+)
 from repro.runtime.sim import Sim
+from repro.runtime.topology import topology_from_spec
 from repro.runtime.storage import CheckpointStorage, PartitionCheckpoint
 from repro.streaming.events import EventBatch
 from repro.streaming.generator import NexmarkConfig, generate_log
@@ -122,10 +137,19 @@ class HolonNode:
         # delta sync: per-peer acked (folded, progress) baseline per shared
         # spec — what the peer is known to hold; absent = ship full state
         self.peer_baseline: dict[int, tuple] = {}
+        self._baseline_t: dict[int, float] = {}  # last ack time per peer
         # dynamic membership (docs/protocol.md §3)
         self.epoch = 0  # highest membership epoch seen (gossiped in beacons)
         self.departing = False  # set while draining for scale-in
         self._bootstrap_pending = False  # joiner: request state on first hb
+        # graceful departures seen (nid -> leaving-beacon time): guards
+        # transitive liveness gossip against resurrecting a drained peer
+        # from a stale relayed sighting (docs/protocol.md §5); a sighting
+        # newer than the departure (scale-out revival) clears the entry
+        self.departed: dict[int, float] = {}
+        # subscription-versioned peer-list cache (rebuilding the full list
+        # per beacon/sync round is O(N) x every round x every node)
+        self._peers_cache: tuple | None = None
 
     # ---- lifecycle ---------------------------------------------------------
     def boot(self, initial_pids: list[int]):
@@ -167,9 +191,11 @@ class HolonNode:
         self.last_hb = {}
         self._rr = 0
         self.peer_baseline = {}
+        self._baseline_t = {}
         self.departing = False
         self._bootstrap_pending = False
-        self.h.unsubscribed.discard(self.nid)  # rejoin the broadcast stream
+        self.departed = {}
+        self.h._subscribe(self.nid)  # rejoin the broadcast stream
         self.boot([])
         # control loop will steal this node's assigned partitions
 
@@ -179,17 +205,23 @@ class HolonNode:
         partition, announce departure, leave.  The flush is scheduled before
         the leaving beacon, and the simulator delivers FIFO per timestamp,
         so peers rebalance only after our state is on the wire — takeover
-        reads a checkpoint at the exact input frontier (no replay)."""
+        reads a checkpoint at the exact input frontier (no replay).
+
+        The flush and the leaving beacon go to *every* subscribed peer even
+        under a sparse topology (docs/protocol.md §5): departure is a rare
+        one-shot control event, and telling everyone directly is what lets
+        peers drop our baselines and rebalance without waiting for the
+        gossip graph to carry the news."""
         if not self.alive or self.departing:
             return
         if self.h.obs.on:
             self.h.obs.event("node.drain", node=self.nid, owned=tuple(self.owned))
         self.departing = True
-        self._publish_sync()
+        self._publish_sync(flush=True)
         for pid in list(self.owned):
             self._handoff(pid)
         self._broadcast_hb(leaving=True)
-        self.h.unsubscribed.add(self.nid)  # close our broadcast subscription
+        self.h._unsubscribe(self.nid)  # close our broadcast subscription
         self.alive = False
 
     # ---- helpers -----------------------------------------------------------
@@ -272,37 +304,117 @@ class HolonNode:
     def _peers(self) -> list["HolonNode"]:
         """Everyone else still subscribed to the broadcast stream (drained
         nodes closed their subscription, so nobody pays to publish to them —
-        restart/scale_out re-subscribes)."""
-        return [
-            n
-            for n in self.h.nodes.values()
-            if n.nid != self.nid and n.nid not in self.h.unsubscribed
-        ]
+        restart/scale_out re-subscribes).  Cached against the harness's
+        subscription version: the list only changes on node registration,
+        drain/decommission, or restart, so the per-round rebuild collapses
+        to a version check (verified byte-identical pre/post)."""
+        cache = self._peers_cache
+        ver = self.h._sub_version
+        if cache is None or cache[0] != ver:
+            nodes = [
+                n
+                for n in self.h.nodes.values()
+                if n.nid != self.nid and n.nid not in self.h.unsubscribed
+            ]
+            cache = (ver, nodes, [n.nid for n in nodes])
+            self._peers_cache = cache
+        return cache[1]
+
+    def _peer_nids(self) -> list[int]:
+        self._peers()  # refresh the versioned cache
+        return self._peers_cache[2]
+
+    # bounded liveness digest piggybacked on sparse-topology beacons: big
+    # enough to flood fresh sightings in O(log N) rounds, small enough to
+    # keep heartbeats O(1) — docs/protocol.md §5
+    GOSSIP_DIGEST = 16
+
+    def _gossip_digest(self) -> tuple:
+        """The freshest sightings we hold, newest first (nid tie-break), so
+        a relayed entry always carries the *original* beacon send-time —
+        transitive liveness never claims more than a direct beacon did."""
+        items = sorted(self.last_hb.items(), key=lambda kv: (-kv[1], kv[0]))
+        return tuple(items[: self.GOSSIP_DIGEST])
 
     def _broadcast_hb(self, leaving: bool = False):
         if not self.alive and not leaving:
             return
         t, ep, joining = self.h.sim.now, self.epoch, self._bootstrap_pending
-        for other in self._peers():
+        topo = self.h.topology
+        peers = self._peers()
+        if leaving or not topo.sparse:
+            # all-to-all, and every leaving beacon: direct to everyone,
+            # no digest (transitive gossip is provably redundant when each
+            # beacon already reaches each peer — docs/protocol.md §5)
+            targets, view, gone = peers, (), ()
+        else:
+            rnd = int(t // max(self.h.cfg.hb_interval_ms, 1.0))
+            sel = set(topo.peers_of(self.nid, rnd, self._peer_nids()))
+            targets = [p for p in peers if p.nid in sel]
+            view = self._gossip_digest()
+            gone = tuple(
+                sorted(self.departed.items(), key=lambda kv: (-kv[1], kv[0]))
+                [: self.GOSSIP_DIGEST]
+            )
+        nbytes = HB_BYTES + GOSSIP_ENTRY_BYTES * (len(view) + len(gone))
+        for other in targets:
             self.h.net.send(
-                self.nid, other.nid, "hb", HB_BYTES,
-                lambda o=other, s=self.nid, tt=t, e=ep, lv=leaving, jn=joining:
-                    o._on_hb(s, tt, e, lv, jn),
+                self.nid, other.nid, "hb", nbytes,
+                lambda o=other, s=self.nid, tt=t, e=ep, lv=leaving, jn=joining,
+                       vw=view, gn=gone:
+                    o._on_hb(s, tt, e, lv, jn, vw, gn),
             )
 
+    def _note_sighting(self, nid: int, t: float):
+        """Record a liveness sighting (direct beacon or relayed digest
+        entry), guarded against stale news about a departed peer: only a
+        sighting strictly newer than the departure revives it (that is a
+        scale-out re-join, whose fresh beacons postdate the drain)."""
+        dep = self.departed.get(nid)
+        if dep is not None:
+            if t <= dep:
+                return
+            del self.departed[nid]
+        cur = self.last_hb.get(nid, -1.0)
+        if t > cur:
+            self.last_hb[nid] = t
+
+    def _note_departed(self, nid: int, t: float):
+        """Record a graceful departure (direct leaving beacon or relayed
+        entry).  Ignored when we have already seen the peer alive *after*
+        ``t`` — the departure news is stale and the peer is back."""
+        if self.last_hb.get(nid, -1.0) > t:
+            return
+        self.departed[nid] = max(self.departed.get(nid, -1.0), t)
+        known = self.last_hb.pop(nid, None) is not None
+        self.peer_baseline.pop(nid, None)
+        self._baseline_t.pop(nid, None)
+        if known:
+            # newly learned departure via gossip: rebalance like a direct
+            # leaving beacon would have (docs/protocol.md §3.2)
+            self._rebalance(self.generation)
+
     def _on_hb(self, sender: int, t: float, epoch: int, leaving: bool,
-               joining: bool = False):
+               joining: bool = False, view: tuple = (), gone: tuple = ()):
         if not self.alive:
             return
         self.epoch = max(self.epoch, epoch)
         if leaving:
             # graceful departure: drop the peer from the live view *now*
             # (no hb_timeout wait) and take over its partitions promptly
+            self.departed[sender] = max(self.departed.get(sender, -1.0), t)
             self.last_hb.pop(sender, None)
             self.peer_baseline.pop(sender, None)
+            self._baseline_t.pop(sender, None)
             self._rebalance(self.generation)
             return
-        self.last_hb[sender] = max(self.last_hb.get(sender, -1.0), t)
+        self._note_sighting(sender, t)
+        for nid, tn in view:
+            if nid != self.nid:
+                self._note_sighting(nid, tn)
+        for nid, tn in gone:
+            if nid != self.nid:
+                self._note_departed(nid, tn)
         if self._bootstrap_pending and not joining:
             # joiner bootstrap (docs/protocol.md §3.1): ask the first
             # *settled* peer we hear for its full state (a co-joiner's beacon
@@ -422,42 +534,87 @@ class HolonNode:
         self._publish_sync()
         self.h.sim.after(self.h.cfg.sync_interval_ms, lambda: self._loop_sync(gen))
 
-    def _publish_sync(self):
-        """One background sync round: per-peer delta (or full replica)."""
+    def _publish_sync(self, flush: bool = False):
+        """One background sync round: a delta (or full replica) to each peer
+        the dissemination topology schedules for this round — every peer
+        under the all-to-all oracle, a sparse subset otherwise; multi-hop
+        relay through intermediate replicas carries the rest
+        (docs/protocol.md §5).  ``flush=True`` (drain) bypasses the
+        topology and contacts everyone one last time.
+
+        Identical baselines ship identical deltas, so the (deterministic)
+        ``delta_fn`` runs once per *distinct* baseline, not once per peer —
+        in the converged steady state that is one call per round."""
         if not self.h.query.shared_specs:
             return
         snap = self.replica
         marker = self.h.marker_of(snap)
         peers = self._peers()
+        self.h.note_counterfactual_round(len(peers))
+        topo = self.h.topology
+        if flush or not topo.sparse:
+            targets = peers
+        else:
+            rnd = int(self.h.sim.now // max(self.h.cfg.sync_interval_ms, 1.0))
+            sel = set(topo.peers_of(self.nid, rnd, self._peer_nids()))
+            targets = [p for p in peers if p.nid in sel]
         shipped_total = 0.0
-        for other in peers:
-            if self.h.cfg.delta_sync:
+        if self.h.cfg.delta_sync:
+            ttl = self.h.cfg.baseline_ttl_ms
+            if ttl > 0.0:
+                self._age_baselines(ttl)
+            by_base: dict = {}
+            for other in targets:
                 base = self.peer_baseline.get(other.nid, self.h.zero_base)
-                payload = self.h.delta_fn(snap, base)
-                shipped = self.h.delta_bytes(payload)
-            else:
-                base, payload, shipped = None, snap, self.h.full_state_bytes
-            shipped_total += shipped
-            self.h.sync_bytes_full += self.h.full_state_bytes
-            self.h.net.send(
-                self.nid, other.nid, "sync", shipped,
-                lambda o=other, pay=payload, b=base, mk=marker: o._on_sync(
-                    pay, self.nid, b, mk
-                ),
-            )
+                key = tuple((bf.tobytes(), bp.tobytes()) for bf, bp in base)
+                ent = by_base.get(key)
+                if ent is None:
+                    payload = self.h.delta_fn(snap, base)
+                    ent = by_base[key] = (base, payload, self.h.delta_bytes(payload))
+                base, payload, shipped = ent
+                shipped_total += shipped
+                self.h.net.send(
+                    self.nid, other.nid, "sync", shipped,
+                    lambda o=other, pay=payload, b=base, mk=marker: o._on_sync(
+                        pay, self.nid, b, mk
+                    ),
+                )
+        else:
+            for other in targets:
+                shipped_total += self.h.full_state_bytes
+                self.h.net.send(
+                    self.nid, other.nid, "sync", self.h.full_state_bytes,
+                    lambda o=other, mk=marker: o._on_sync(
+                        snap, self.nid, None, mk
+                    ),
+                )
         obs = self.h.obs
-        if obs.on and peers:
+        if obs.on and targets:
             obs.event(
                 "sync.publish", node=self.nid,
                 status="delta" if self.h.cfg.delta_sync else "full",
-                peers=tuple(o.nid for o in peers), shipped=shipped_total,
+                peers=tuple(o.nid for o in targets), shipped=shipped_total,
+                topology=topo.name, fanout=len(targets),
             )
             obs.registry.counter("sync_rounds", node=self.nid).inc()
+
+    def _age_baselines(self, ttl_ms: float):
+        """Drop ack baselines not refreshed within ``ttl_ms``: the peer
+        falls back to ``zero_base`` (one full-state round re-seeds it).
+        Baselines are always *valid* — a peer acked what it holds and
+        replicas only grow — so aging bounds staleness and memory under
+        sparse fanout, never correctness (docs/protocol.md §5)."""
+        cut = self.h.sim.now - ttl_ms
+        for nid in [n for n, t in self._baseline_t.items() if t < cut]:
+            del self._baseline_t[nid]
+            self.peer_baseline.pop(nid, None)
 
     def _on_state_request(self, requester: int):
         """Serve a joiner's bootstrap: reply with the full replica and its
         marker, no baseline — the joiner merges unconditionally and acks,
-        which also seeds our delta baseline for it."""
+        which also seeds our delta baseline for it.  The fabric meters the
+        reply's real bytes; it deliberately does NOT count toward
+        ``sync_bytes_full``, which models only periodic sync rounds."""
         if not self.alive or not self.h.query.shared_specs:
             return
         snap = self.replica
@@ -466,7 +623,6 @@ class HolonNode:
         if self.h.obs.on:
             self.h.obs.event("sync.bootstrap", node=self.nid, dst=requester,
                              shipped=self.h.full_state_bytes)
-        self.h.sync_bytes_full += self.h.full_state_bytes
         self.h.net.send(
             self.nid, requester, "sync", self.h.full_state_bytes,
             lambda r=requester, s=snap, mk=marker: self.h.nodes[r]._on_sync(
@@ -522,6 +678,7 @@ class HolonNode:
     def _on_sync_ack(self, peer: int, marker):
         if not self.alive:
             return
+        self._baseline_t[peer] = self.h.sim.now  # refresh the aging clock
         cur = self.peer_baseline.get(peer)
         if cur is None:
             self.peer_baseline[peer] = marker
@@ -534,6 +691,7 @@ class HolonNode:
     def _on_sync_nack(self, peer: int):
         if self.alive:
             self.peer_baseline.pop(peer, None)
+            self._baseline_t.pop(peer, None)
 
     def _loop_control(self, gen: int):
         if not self.alive or gen != self.generation:
@@ -544,12 +702,16 @@ class HolonNode:
 
     def _rebalance(self, gen: int):
         """Steal partitions the rendezvous rule assigns to me that I don't
-        own; hand off ones whose owner is now someone else."""
-        if not self.alive or gen != self.generation:
+        own; hand off ones whose owner is now someone else.  A joiner still
+        bootstrapping skips the sweep: under sparse dissemination its live
+        view is one or two beacons old, and rendezvous over that sliver
+        would steal partitions it must immediately hand back — the next
+        control tick (post-bootstrap, view converging) rebalances for real."""
+        if not self.alive or gen != self.generation or self._bootstrap_pending:
             return
         live = self._live_view()
-        for pid in range(self.h.cfg.num_partitions):
-            tgt = assignment(pid, live)
+        owners = self.h.owners_of(tuple(live))
+        for pid, tgt in enumerate(owners):
             if tgt == self.nid and pid not in self.meta:
                 # steal handshake, then a fabric-routed checkpoint fetch:
                 # _finish_steal runs at the RPC's round-trip point (and
@@ -568,7 +730,7 @@ class HolonNode:
         if not self.alive or gen != self.generation or pid in self.meta:
             return
         # re-check assignment under the current view (node may have returned)
-        if assignment(pid, self._live_view()) != self.nid:
+        if self.h.owners_of(tuple(self._live_view()))[pid] != self.nid:
             return
         ck = self.h.storage.get(pid)
         if self.h.obs.on:
@@ -645,7 +807,10 @@ class HolonHarness:
             float(W.state_nbytes(loc)) if loc is not None else 0.0
         )
         self.sync_nacks = 0
-        self.sync_bytes_full = 0.0  # what full-state sync would have shipped
+        self.sync_bytes_full = 0.0  # what full-state all-to-all would ship
+        # dissemination topology of the gossip plane (docs/protocol.md §5):
+        # one schedule object shared by every node's sync + heartbeat loops
+        self.topology = topology_from_spec(cfg.topology, seed=cfg.seed)
         # dynamic membership: nid -> node, every node ever registered (the
         # broadcast-stream subscriber list); epoch bumps per reconfigure
         self.nodes: dict[int, HolonNode] = {
@@ -653,10 +818,49 @@ class HolonHarness:
         }
         self.membership_epoch = 0
         # broadcast-stream subscription registry: drained nodes unsubscribe,
-        # so publishers stop paying per-peer sync cost for them
+        # so publishers stop paying per-peer sync cost for them.  Mutate it
+        # only through _subscribe/_unsubscribe — _sub_version invalidates
+        # every node's cached peer list
         self.unsubscribed: set[int] = set()
+        self._sub_version = 0
+        # rendezvous assignment memo: owners of every partition per distinct
+        # live view.  assignment() is a pure function, so converged views
+        # (the common case — every node, every control tick) share one
+        # entry instead of re-hashing num_partitions x live_nodes each tick
+        self._assign_cache: dict[tuple[int, ...], tuple[int, ...]] = {}
         # (requester, server) log of §3.1 bootstrap handshakes (test probe)
         self.bootstrap_served: list[tuple[int, int]] = []
+
+    def _subscribe(self, nid: int) -> None:
+        self.unsubscribed.discard(nid)
+        self._sub_version += 1
+
+    def _unsubscribe(self, nid: int) -> None:
+        self.unsubscribed.add(nid)
+        self._sub_version += 1
+
+    def note_counterfactual_round(self, num_peers: int) -> None:
+        """Accrue ``sync_bytes_full``: what a full-state **all-to-all**
+        broadcast would have shipped for this sync round — always every
+        subscribed peer at full state, regardless of the configured
+        topology or delta sync.  Bootstrap serves are deliberately NOT
+        counted (they are §3.1 membership traffic, metered by the fabric);
+        mixing them in here used to overstate the counterfactual and make
+        the delta-savings ratio look better than it was."""
+        self.sync_bytes_full += self.full_state_bytes * num_peers
+
+    def owners_of(self, live: tuple[int, ...]) -> tuple[int, ...]:
+        """``assignment(pid, live)`` for every partition, memoized per live
+        view (byte-identical to calling the rule directly)."""
+        owners = self._assign_cache.get(live)
+        if owners is None:
+            if len(self._assign_cache) > 4096:  # churn bound, not a hot path
+                self._assign_cache.clear()
+            owners = tuple(
+                assignment(p, live) for p in range(self.cfg.num_partitions)
+            )
+            self._assign_cache[live] = owners
+        return owners
 
     # sync bandwidth now comes from the fabric's per-class meters — the
     # single source of truth for wire bytes (docs/protocol.md §4).  "sync"
@@ -713,6 +917,7 @@ class HolonHarness:
             if node is None:
                 node = HolonNode(nid, self)
                 self.nodes[nid] = node
+                self._sub_version += 1  # new broadcast-stream subscriber
                 node.epoch = self.membership_epoch
                 node._bootstrap_pending = bool(self.query.shared_specs)
                 node.boot([])
@@ -729,7 +934,7 @@ class HolonHarness:
                 # decommission a crashed node: it cannot drain, but it must
                 # stop costing publishers; peers already rebalanced via
                 # hb_timeout when it went silent
-                self.unsubscribed.add(int(nid))
+                self._unsubscribe(int(nid))
 
     def _node(self, nid: int) -> HolonNode:
         node = self.nodes.get(nid)
@@ -747,14 +952,19 @@ class HolonHarness:
     ):
         scenario = as_scenario(scenario)
         live0 = sorted(self.nodes)
+        owners0 = self.owners_of(tuple(live0))
         for n in self.nodes.values():
-            n.boot(
-                [
-                    p
-                    for p in range(self.cfg.num_partitions)
-                    if assignment(p, live0) == n.nid
-                ]
-            )
+            # seed membership: initial members boot knowing the t=0 roster
+            # (the deployment's config), exactly as if every boot beacon had
+            # already landed — under all-to-all this is what the first
+            # beacon round establishes anyway (same send-time 0.0, so the
+            # schedule is unchanged); under a sparse topology it stops a
+            # cold two-beacon view from triggering spurious rendezvous
+            # steals in the first control ticks (docs/protocol.md §5)
+            for other in live0:
+                if other != n.nid:
+                    n.last_hb[other] = 0.0
+            n.boot([p for p, o in enumerate(owners0) if o == n.nid])
         for ev in scenario.events:
             if ev.kind == "crash":
                 for nid in ev.nodes:

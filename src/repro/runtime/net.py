@@ -65,6 +65,10 @@ STORAGE = "storage"
 # metered with their measured nbytes)
 HB_BYTES = 64.0
 CTRL_BYTES = 16.0
+# one (nid, timestamp) liveness-digest entry piggybacked on heartbeats by
+# sparse dissemination topologies (docs/protocol.md §5): 4-byte id + 8-byte
+# time.  All-to-all beacons carry no digest and stay at HB_BYTES.
+GOSSIP_ENTRY_BYTES = 12.0
 
 _M64 = (1 << 64) - 1
 
