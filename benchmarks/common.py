@@ -48,6 +48,18 @@ def latency_fields(stats: dict, sep: str = ";") -> str:
     )
 
 
+def memory_fields(state_bytes: float, peak_bytes: float | None = None,
+                  sep: str = ";") -> str:
+    """The canonical ``state_bytes_per_dev=..[;peak_live_bytes=..]`` spelling
+    of a row's per-device memory footprint, shared by every section that
+    reports one (throughput, keyed scale) — same dedup role as
+    :func:`latency_fields` plays for latency summaries."""
+    parts = [f"state_bytes_per_dev={state_bytes:.0f}"]
+    if peak_bytes is not None:
+        parts.append(f"peak_live_bytes={peak_bytes:.0f}")
+    return sep.join(parts)
+
+
 def export_traces(cfg, query, scenario, horizon_ms, out_prefix) -> dict:
     """Re-run ``scenario`` with telemetry on (both runtimes) and export the
     traces next to the benchmark rows: ``<prefix>_<system>.jsonl`` (full

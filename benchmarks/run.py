@@ -2,7 +2,7 @@
 
 Prints ``name,us_per_call,derived`` CSV lines and writes the same rows as
 machine-readable JSON (``{"sections": {section: [row, ...]}}``) to
-``BENCH_pr7.json`` so the perf trajectory accumulates across PRs.  Sections:
+``BENCH_pr9.json`` so the perf trajectory accumulates across PRs.  Sections:
   fig6_table2   failure recovery latency (Holon vs Flink-like)
   fig7_8        latency sensitivity under failures
   scalability   sync traffic + latency vs cluster size per gossip topology
@@ -11,6 +11,7 @@ machine-readable JSON (``{"sections": {section: [row, ...]}}``) to
   obs           per-phase latency breakdown + trace-audited recovery
                 timelines + telemetry overhead (docs/observability.md)
   throughput    max-throughput (sim peak) + real dataplane events/s
+  keyed         million-key sharded-vs-dense keyed-state scaling sweep
   roofline      per-(arch x shape) roofline terms from the dry-run
   kernels       WCRDT fold/merge/topk microbenchmarks
 
@@ -27,7 +28,7 @@ import sys
 import traceback
 from pathlib import Path
 
-BENCH_JSON = Path(__file__).resolve().parents[1] / "BENCH_pr7.json"
+BENCH_JSON = Path(__file__).resolve().parents[1] / "BENCH_pr9.json"
 
 
 def main() -> None:
@@ -46,6 +47,7 @@ def main() -> None:
         elasticity,
         failure_recovery,
         kernels_bench,
+        keyed_scale,
         observability,
         roofline,
         scalability,
@@ -57,6 +59,7 @@ def main() -> None:
         "kernels": kernels_bench.main,
         "roofline": roofline.main,
         "throughput": throughput.main,
+        "keyed": keyed_scale.main,
         "fig6_table2": failure_recovery.main,
         "fig7_8": sensitivity.main,
         "scalability": scalability.main,

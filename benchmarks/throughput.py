@@ -17,17 +17,18 @@ import time
 import jax
 import numpy as np
 
-from benchmarks.common import emit, timer
+from benchmarks.common import emit, memory_fields, timer
 from repro.streaming import NexmarkConfig, generate_log, make_q0, make_q1_ratio, make_q4, make_q7
 
 
 def real_dataplane_rate(
     query_name: str, batches: int = 32, epb: int = 2048, sync_every: int = 4,
     delta_sync: bool = True, hop: int | None = None,
-) -> tuple[float, float, float]:
-    """Returns (events/s, measured sync bytes per round per device, and the
+) -> tuple[float, float, float, float]:
+    """Returns (events/s, measured sync bytes per round per device, the
     full-replica bytes a full-state round would ship — the delta's comparand,
-    a constant of the query's specs)."""
+    a constant of the query's specs — and the device's input-log bytes, so
+    rows can report a modeled peak of state + resident log)."""
     from repro import compat
     from repro.core import wcrdt as W
     from repro.launch.stream import MAKERS, build_pipeline, read_window_range
@@ -51,7 +52,9 @@ def real_dataplane_rate(
         jax.block_until_ready(oks)
         dt = time.time() - t0
     rounds = max(batches // sync_every, 1)
-    return batches * epb / dt, float(np.asarray(sb).mean()) / rounds, full_bytes
+    log_bytes = sum(leaf.nbytes for leaf in jax.tree.leaves(log))
+    return (batches * epb / dt, float(np.asarray(sb).mean()) / rounds,
+            full_bytes, float(log_bytes))
 
 
 def sim_peak(query_maker, shuffle_cost_per_event_ms: float = 0.0) -> tuple[float, float]:
@@ -80,13 +83,14 @@ def main(quick: bool = False):
     for qn in ("q7", "q4", "q1_ratio"):
         batches = 16 if quick else 32
         with timer() as tm:
-            rate, delta_bpr, full_bpr = real_dataplane_rate(qn, batches=batches)
+            rate, delta_bpr, full_bpr, log_b = real_dataplane_rate(qn, batches=batches)
         ratio = full_bpr / max(delta_bpr, 1.0)
         emit(
             f"throughput/real_dataplane/{qn}",
             tm.dt * 1e6,
             f"events_per_s={rate/1e6:.2f}M;sync_bytes_per_round={delta_bpr:.0f};"
-            f"full_sync_bytes_per_round={full_bpr:.0f};sync_reduction_x={ratio:.1f}",
+            f"full_sync_bytes_per_round={full_bpr:.0f};sync_reduction_x={ratio:.1f};"
+            + memory_fields(full_bpr, full_bpr + log_b),
         )
 
     # sliding-window q5 (EXPERIMENTS.md §Perf iteration D): hop=500 (each
@@ -96,7 +100,7 @@ def main(quick: bool = False):
     rows = {}
     for label, hop in (("sliding_hop500", 500), ("tumbling_hop1000", 1000)):
         with timer() as tm:
-            rate, delta_bpr, full_bpr = real_dataplane_rate(
+            rate, delta_bpr, full_bpr, log_b = real_dataplane_rate(
                 "q5", batches=batches, hop=hop
             )
         rows[label] = (rate, delta_bpr, full_bpr)
@@ -105,7 +109,8 @@ def main(quick: bool = False):
             tm.dt * 1e6,
             f"events_per_s={rate/1e6:.2f}M;sync_bytes_per_round={delta_bpr:.0f};"
             f"full_sync_bytes_per_round={full_bpr:.0f};"
-            f"sync_reduction_x={full_bpr/max(delta_bpr,1.0):.1f}",
+            f"sync_reduction_x={full_bpr/max(delta_bpr,1.0):.1f};"
+            + memory_fields(full_bpr, full_bpr + log_b),
         )
     overlap_x = rows["sliding_hop500"][1] / max(rows["tumbling_hop1000"][1], 1.0)
     emit(

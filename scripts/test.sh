@@ -6,6 +6,7 @@
 #   scripts/test.sh multidevice  # multi-device suite under 8 virtual devices
 #   scripts/test.sh chaos      # network-fabric loss/partition sweeps
 #   scripts/test.sh topo       # fast dissemination-topology suite only
+#   scripts/test.sh keyed      # keyed-sharding + segment-reduce suite (8 vdev)
 #   scripts/test.sh obs        # telemetry smoke: export + audit a chaos run
 #   scripts/test.sh all        # tier-1, then slow, multidevice, chaos, obs
 set -euo pipefail
@@ -39,6 +40,13 @@ obs() {
   # audit the protocol invariants, validate the Chrome trace-event schema
   python scripts/obs_smoke.py
 }
+# keyed/sharded dataplane quick loop: segment-reduce parity + sharding laws
+# + the multidevice chaos subprocess tests (which spawn their own 8-vdev
+# children, so the flag here only covers anything running in-process)
+keyed() {
+  XLA_FLAGS="--xla_force_host_platform_device_count=8 ${XLA_FLAGS:-}" \
+    python -m pytest -q tests/test_segment_reduce.py tests/test_keyed_sharding.py "$@"
+}
 multidevice() {
   XLA_FLAGS="--xla_force_host_platform_device_count=8 ${XLA_FLAGS:-}" \
     python -m pytest -q -m multidevice "$@"
@@ -49,8 +57,9 @@ case "${1:-tier1}" in
   slow) slow "${@:2}" ;;
   chaos) chaos "${@:2}" ;;
   topo) topo "${@:2}" ;;
+  keyed) keyed "${@:2}" ;;
   obs) obs ;;
   multidevice) multidevice "${@:2}" ;;
   all) tier1 "${@:2}"; slow "${@:2}"; multidevice "${@:2}"; chaos "${@:2}"; obs ;;
-  *) echo "usage: $0 [tier1|slow|chaos|topo|multidevice|all|obs]" >&2; exit 2 ;;
+  *) echo "usage: $0 [tier1|slow|chaos|topo|keyed|multidevice|all|obs]" >&2; exit 2 ;;
 esac

@@ -602,6 +602,156 @@ def wtopk(
     )
 
 
+# ---------------------------------------------------------------------------
+# Hash-sharded keyed state (docs/protocol.md §6)
+# ---------------------------------------------------------------------------
+
+
+def _shard_multiplier(num_keys: int) -> int:
+    """Largest ``a`` with ``a * num_keys < 2**31`` and ``gcd(a, num_keys) == 1``
+    — so ``p(k) = (k * a) % num_keys`` is an i32-safe bijection on [0, C)."""
+    import math
+
+    a = max((2**31 - 1) // num_keys, 1)
+    while math.gcd(a, num_keys) != 1:
+        a -= 1
+    return a
+
+
+@dataclasses.dataclass(frozen=True)
+class KeyShards:
+    """Hash routing of a keyed domain [0, C) over S owner shards
+    (docs/protocol.md §6).
+
+    The "hash" is a multiplicative permutation ``p(k) = (k * mult) % C``
+    (bijective because ``gcd(mult, C) == 1``, i32-safe because
+    ``mult * C < 2**31`` — jax runs with x64 disabled); ``owner = p % S``
+    spreads consecutive (zipf-hot) keys across shards and ``local = p // S``
+    is a dense O(1) index into the owner's ``[W, ceil(C/S)]`` key range — no
+    per-key hash table.  The inverse (local -> global key, needed by the
+    cross-shard top-k read) is the precomputed :meth:`key_table`, shipped as
+    a device-sharded input rather than recomputed on device (the modular
+    inverse would overflow i32).
+
+    Hashable and static — safe to close over in a jitted dataplane.
+    """
+
+    num_keys: int  # C — global keyed domain size
+    num_shards: int  # S — owner shards (= mesh data-axis size)
+    mult: int = 0  # permutation multiplier; 0 = derive in __post_init__
+
+    def __post_init__(self):
+        if self.mult == 0:
+            object.__setattr__(self, "mult", _shard_multiplier(self.num_keys))
+
+    @property
+    def width(self) -> int:
+        """Local key-range size ceil(C/S) — every shard's state is padded to
+        this so the sharded WState has one static shape."""
+        return -(-self.num_keys // self.num_shards)
+
+    def perm(self, keys: jax.Array) -> jax.Array:
+        return (keys.astype(jnp.int32) * jnp.int32(self.mult)) % jnp.int32(self.num_keys)
+
+    def shard_of(self, keys: jax.Array) -> jax.Array:
+        """Owner shard id per key (the hash-routing rule)."""
+        return self.perm(keys) % jnp.int32(self.num_shards)
+
+    def local_of(self, keys: jax.Array) -> jax.Array:
+        """Dense index into the owner's local key range."""
+        return self.perm(keys) // jnp.int32(self.num_shards)
+
+    def num_local(self, shard: int) -> int:
+        """Real (unpadded) key count of ``shard``'s range."""
+        return (self.num_keys - shard + self.num_shards - 1) // self.num_shards
+
+    def key_table(self) -> np.ndarray:
+        """u32[S, width] inverse map ``(shard, local) -> global key``; padded
+        entries (locals past the shard's real range) carry the sentinel C."""
+        C, S = self.num_keys, self.num_shards
+        p = (np.arange(C, dtype=np.int64) * self.mult) % C
+        inv = np.empty(C, dtype=np.uint32)
+        inv[p] = np.arange(C, dtype=np.uint32)
+        table = np.full((S, self.width), C, dtype=np.uint32)
+        for s in range(S):
+            n = self.num_local(s)
+            table[s, :n] = inv[s + S * np.arange(n, dtype=np.int64)]
+        return table
+
+
+def wgcounter_sharded(
+    window_len: int, num_slots: int, num_partitions: int, shards: KeyShards,
+    dtype=jnp.float32, assigner: WindowAssigner | None = None,
+) -> WSpec:
+    """Keyed grow-only counter over ONE shard's key range
+    (docs/protocol.md §6).
+
+    State is ``[W, 1, width]``: the key axis holds only this shard's
+    ``ceil(C/S)`` locals, and the actor axis collapses to 1 because folds are
+    owner-exclusive — every event for a key is routed to its single owner, so
+    no per-actor slots are needed for merge monotonicity (replay idempotence
+    still comes from the ``folded`` frontier, which keeps all
+    ``num_partitions`` source entries, as does ``progress``).  The generic
+    WState machinery (``delta_since``/``merge``/``window_value``) operates on
+    this per-key-range state unchanged — a delta ships only the owner's dirty
+    slots of its own range.  Fold inputs: ``amounts`` per lane plus ``keys``
+    = LOCAL indices (route with :meth:`KeyShards.local_of` first).
+    """
+    width = shards.width
+    return WSpec(
+        window_len=window_len,
+        assigner=assigner,
+        num_slots=num_slots,
+        num_partitions=num_partitions,
+        zero_windows=partial(
+            crdts.GCounter.zero_windows, num_slots, 1, (width,), dtype
+        ),
+        fold=lambda w, s, m, amounts, keys: w.fold_windows(s, m, 0, amounts, keys),
+        read=lambda w, slot: w.window_value(slot),
+    )
+
+
+def shard_topk_read(
+    spec: WSpec, state: WState, wid, key_table_row: jax.Array, num_keys: int,
+    axis_name: str, k: int = 1,
+):
+    """Cross-shard top-k window read over a sharded keyed counter — no full
+    gather (docs/protocol.md §6).
+
+    Each shard reduces its own ``[width]`` key range to k ``(count, key)``
+    candidates (padded locals masked via the ``key_table_row`` sentinel),
+    the ``[S, k]`` candidate sets ride one small ``all_gather``, and the
+    global top-k is selected by (count desc, key asc).  ``k=1`` reproduces
+    ``jnp.argmax`` over the unsharded count vector exactly: ties break to
+    the lowest GLOBAL key id (not local index — the routing permutation is
+    not monotone).  Returns ``((counts f32[k], keys u32[k]), ok)``; ``ok``
+    requires the window complete and unevicted on every shard.
+    """
+    counts, ok = window_value(spec, state, wid)
+    live = key_table_row < jnp.uint32(num_keys)
+    sentinel_key = jnp.uint32(num_keys)
+    if k == 1:
+        masked = jnp.where(live, counts, -jnp.inf)
+        cmax = jnp.max(masked)
+        ckey = jnp.min(jnp.where(masked == cmax, key_table_row, sentinel_key))
+        cand_c = lax.all_gather(cmax, axis_name)  # [S]
+        cand_k = lax.all_gather(ckey, axis_name)
+        gmax = jnp.max(cand_c)
+        gkey = jnp.min(jnp.where(cand_c == gmax, cand_k, sentinel_key))
+        top = (gmax[None], gkey[None])
+    else:
+        masked = jnp.where(live, counts, -jnp.inf)
+        cv, ci = lax.top_k(masked, k)
+        ck = jnp.where(cv > -jnp.inf, key_table_row[ci], sentinel_key)
+        cand_v = lax.all_gather(cv, axis_name).reshape(-1)  # [S*k]
+        cand_k = lax.all_gather(ck, axis_name).reshape(-1)
+        # (count desc, key asc): sort ascending on the negated count first
+        sv, sk = lax.sort((-cand_v, cand_k), dimension=0, num_keys=2)
+        top = (-sv[:k], sk[:k])
+    ok = jnp.min(lax.all_gather(ok.astype(jnp.int32), axis_name)) > 0
+    return top, ok
+
+
 def wgset(
     window_len: int, num_slots: int, num_partitions: int, domain: int,
     assigner: WindowAssigner | None = None,

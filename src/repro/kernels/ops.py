@@ -14,12 +14,36 @@ import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
 from repro.kernels.crdt_merge import crdt_merge_pallas, gated_delta_merge_pallas
+from repro.kernels.segment_reduce import segment_reduce_pallas
 from repro.kernels.topk_window import topk_window_pallas
 from repro.kernels.window_agg import window_agg_pallas
+
+# Keyed cardinality above which the dense one-hot MXU kernel loses to the
+# sorted segment-reduce kernel: the dense path does O(B·C) work per tile and
+# needs a [W, C] VMEM accumulator, while the sparse path's work is
+# C-independent (DESIGN.md §5).  Below the threshold the dense kernel keeps
+# its MXU contraction AND its bit-identical small-C behaviour.
+SPARSE_KEY_THRESHOLD = 1024
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("n_seg", "op", "use_pallas", "interpret"))
+def segment_reduce(
+    vals, segs, mask, n_seg: int, op: str = "sum",
+    use_pallas: bool | None = None, interpret: bool = False,
+):
+    """Per-segment sum/count/max/min of the masked lanes -> f32[n_seg].
+
+    Pallas on TPU (sorted one-pass reduce, kernels/segment_reduce.py), jnp
+    segment ops elsewhere; untouched segments read the op's neutral element.
+    """
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        return segment_reduce_pallas(vals, segs, mask, n_seg, op=op, interpret=interpret)
+    return _ref.segment_reduce_ref(vals, segs, mask, n_seg, op=op)
 
 
 @partial(jax.jit, static_argnames=("W", "op", "C", "use_pallas", "interpret"))
@@ -29,9 +53,23 @@ def window_agg(
 ):
     use = _on_tpu() if use_pallas is None else use_pallas
     if use:
-        out = window_agg_pallas(
-            vals, slots, mask, W, op=op, keys=keys, C=C, interpret=interpret
-        )
+        if keys is not None and C >= SPARSE_KEY_THRESHOLD:
+            # high-cardinality keyed fold: flatten (slot, key) into segment
+            # ids and ride the sorted segment-reduce kernel — the dense
+            # [bt, C] one-hot would do O(B·C) work and outgrow VMEM
+            if W * C >= 2**31:
+                raise ValueError(
+                    f"W*C = {W * C} overflows i32 segment ids; shard the key "
+                    "range first (docs/protocol.md §6)"
+                )
+            seg = slots * jnp.int32(C) + keys
+            out = segment_reduce_pallas(
+                vals, seg, mask, W * C, op=op, interpret=interpret
+            ).reshape(W, C)
+        else:
+            out = window_agg_pallas(
+                vals, slots, mask, W, op=op, keys=keys, C=C, interpret=interpret
+            )
         if init is not None:
             if op in ("sum", "count"):
                 out = out + init

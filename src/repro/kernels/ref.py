@@ -53,6 +53,32 @@ def window_agg_ref(
     return out
 
 
+def segment_reduce_ref(
+    vals: jax.Array,  # [B] any numeric dtype
+    segs: jax.Array,  # i32[B] in [0, n_seg)
+    mask: jax.Array,  # bool[B]
+    n_seg: int,
+    op: str = "sum",
+) -> jax.Array:
+    """f32[n_seg] per-segment sum/count/max/min of the masked lanes.
+
+    Untouched segments read the op's neutral element (0 for sum/count, ∓inf
+    for max/min).  Masked lanes are routed to a sentinel segment past the
+    output and sliced away, so ``segs`` under a False mask may be garbage.
+    """
+    v = vals.astype(jnp.float32)
+    if op == "count":
+        v = jnp.ones_like(v)
+    seg = jnp.where(mask, segs.astype(jnp.int32), jnp.int32(n_seg))
+    if op in ("sum", "count"):
+        out = jax.ops.segment_sum(v, seg, num_segments=n_seg + 1)
+    elif op == "max":
+        out = jnp.maximum(jax.ops.segment_max(v, seg, num_segments=n_seg + 1), -jnp.inf)
+    else:
+        out = jnp.minimum(jax.ops.segment_min(v, seg, num_segments=n_seg + 1), jnp.inf)
+    return out[:n_seg]
+
+
 def crdt_merge_ref(stack: jax.Array, op: str = "max") -> jax.Array:
     """Lattice join of R replica states: reduce over axis 0.
 

@@ -75,16 +75,16 @@ def _kernel_keyed(vals_ref, slots_ref, keys_ref, mask_ref, out_ref, *, op: str, 
             (((0,), (0,)), ((), ())),
             preferred_element_type=jnp.float32,
         )
-    else:  # max/min: VPU masked reduce over [bt, W, C] in W-strips
-        big = jnp.where(
-            oh_w[:, :, None] & oh_c[:, None, :], v[:, None, None],
-            NEUTRAL[op],
-        )
-        red = jnp.max(big, axis=0) if op == "max" else jnp.min(big, axis=0)
-        if op == "max":
-            out_ref[...] = jnp.maximum(out_ref[...], red)
-        else:
-            out_ref[...] = jnp.minimum(out_ref[...], red)
+    else:
+        # max/min: VPU masked reduce, strip-mined one W row at a time — the
+        # live intermediate is [bt, C], never the [bt, W, C] broadcast that
+        # would OOM at moderate C (peak pinned by tests/test_segment_reduce.py)
+        for w in range(W):
+            strip = jnp.where(oh_w[:, w][:, None] & oh_c, v[:, None], NEUTRAL[op])
+            if op == "max":
+                out_ref[w, :] = jnp.maximum(out_ref[w, :], jnp.max(strip, axis=0))
+            else:
+                out_ref[w, :] = jnp.minimum(out_ref[w, :], jnp.min(strip, axis=0))
 
 
 def window_agg_pallas(

@@ -18,5 +18,15 @@ def make_production_mesh(*, multi_pod: bool = False):
     return compat.make_mesh(shape, axes)
 
 
+def make_data_mesh(n_dev: int | None = None):
+    """1-D ``data`` mesh over all (or the first ``n_dev``) devices — the
+    shape the keyed/sharded dataplane runs on (docs/protocol.md §6): one
+    owner shard per device, no model axis."""
+    import jax
+
+    n = n_dev if n_dev is not None else len(jax.devices())
+    return compat.make_mesh((n,), ("data",))
+
+
 def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
     return compat.make_mesh(shape, axes)

@@ -25,17 +25,20 @@ Usage:
 from __future__ import annotations
 
 import argparse
+import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
 from repro.core import wcrdt as W
+from repro.core.window import as_assigner
 from repro.obs.timing import WallTimer
-from repro.streaming.events import EventBatch
-from repro.streaming.generator import NexmarkConfig, generate_log
+from repro.streaming.events import KIND_BID, EventBatch
+from repro.streaming.generator import NexmarkConfig, batch_watermark, generate_log
 from repro.streaming.queries import (
     Query,
     make_q0,
@@ -134,6 +137,137 @@ def build_pipeline(
             mesh=mesh,
             in_specs=(log_specs,),
             out_specs=(P("data"), P("data"), P("data")),
+        )
+    )
+
+
+def default_fold_schedule(num_shards: int, num_batches: int) -> np.ndarray:
+    """Failure-free fold schedule for :func:`build_keyed_pipeline`: i32
+    ``[num_shards, num_batches]`` — every device folds batch ``t`` at step
+    ``t``.  Crash-recovery tests splice a replay (``[0..k, j..k, k+1..]``)
+    into a device's row; the ``folded`` frontier makes re-folds no-ops, so
+    the splice reproduces deterministic replay recovery byte-for-byte
+    (docs/protocol.md §6)."""
+    return np.tile(np.arange(num_batches, dtype=np.int32), (num_shards, 1))
+
+
+def build_keyed_pipeline(
+    mesh, shards: W.KeyShards, *, window_len: int = 1000,
+    num_slots: int = 16, hop: int | None = None, sync_every: int = 4,
+    n_windows: int = 8, first_window: int = 0,
+):
+    """Hash-sharded keyed dataplane (docs/protocol.md §6): per-auction bid
+    counts + cross-shard hot-item reads over a key domain too large for any
+    single device's dense ``[W, C]`` state.
+
+    Jitted signature: ``(log, key_table, sched, wm_sync) -> (oks, vals,
+    shuffle_bytes, sync_bytes)`` where
+
+    * ``log`` — EventBatch ``[S, num_batches, B]``, sharded over ``data``;
+    * ``key_table`` — ``shards.key_table()``, sharded over ``data`` (each
+      device keeps only its own inverse row);
+    * ``sched`` — replicated i32 ``[S, n_steps]`` fold schedule
+      (:func:`default_fold_schedule`); column ``t`` names the batch index
+      each device folds at step ``t``, so every device can label the lanes
+      it RECEIVES with the sender's ``batch_idx`` without shipping it;
+    * ``wm_sync`` — replicated bool ``[n_steps // sync_every]``; round
+      ``r``'s watermark exchange runs only where True (False = partitioned:
+      progress maps diverge and windows stall until heal).
+
+    Unlike :func:`build_pipeline` (replicate-everywhere + lattice join),
+    keys are ROUTED: device ``s`` owns key range ``{k : shards.shard_of(k)
+    == s}``, each step all-to-alls the masked ``[S, B]`` routing matrix so
+    every owner folds exactly the lanes it owns, and each device's state is
+    ``[W, ceil(C/S)]`` — per-device state bytes scale ~1/S.  Ownership is
+    exclusive, so the sync plane ships ONLY the ``[S]`` progress map (no
+    slot deltas to reconcile); both modeled byte counters come back as
+    outputs.  Final read: :func:`W.shard_topk_read` per window — one
+    ``[S]``-candidate gather, never the full key range.
+    """
+    S = shards.num_shards
+    assigner = as_assigner(window_len, hop if hop else window_len // 2)
+    spec = W.wgcounter_sharded(window_len, num_slots, S, shards, assigner=assigner)
+    wm_bytes = jnp.float32(S * 4)  # the [S] i32 progress map, per round
+
+    def node_fn(log: EventBatch, key_table, sched, wm_sync):
+        me = jax.lax.axis_index("data")
+        vary = lambda t: jax.tree.map(lambda x: compat.pvary(x, ("data",)), t)
+        state = vary(spec.zero())
+        log0 = jax.tree.map(lambda x: x[0], log)  # [num_batches, B] leaves
+        table0 = compat.pvary(key_table[0], ("data",))  # u32 [width]
+        B = log0.ts.shape[1]
+        rows = jnp.arange(S, dtype=jnp.int32)[:, None]  # [S, 1]
+        a2a = lambda x: jax.lax.all_to_all(
+            x, "data", split_axis=0, concat_axis=0, tiled=True
+        )
+
+        def fold_step(carry, sched_col):
+            state, shuffle_bytes = carry
+            batch = jax.tree.map(lambda x: x[sched_col[me]], log0)
+            is_bid = batch.valid & (batch.kind == KIND_BID)
+            owner = shards.shard_of(batch.auction)
+            local = shards.local_of(batch.auction)
+            # routing matrix: row s = my lanes owned by device s
+            m_sb = is_bid[None, :] & (owner[None, :] == rows)  # [S, B]
+            r_ts = a2a(jnp.broadcast_to(batch.ts[None, :], (S, B)))
+            r_loc = a2a(jnp.broadcast_to(local[None, :], (S, B)))
+            r_mask = a2a(m_sb)
+            # wire model: off-device lanes ship (ts, local) = 8 bytes each
+            sent = m_sb & (rows != me)
+            shuffle_bytes = shuffle_bytes + jnp.sum(sent) * jnp.float32(8.0)
+            # after the exchange, row r holds lanes from source device r,
+            # folded at r's scheduled batch index (sched is replicated)
+            src = jnp.broadcast_to(rows, (S, B)).reshape(-1)
+            bi = jnp.broadcast_to(sched_col[:, None], (S, B)).reshape(-1)
+            state = W.insert(
+                spec, state, src, r_ts.reshape(-1), r_mask.reshape(-1),
+                batch_idx=bi, amounts=jnp.ones((S * B,), jnp.float32),
+                keys=r_loc.reshape(-1),
+            )
+            state = W.increment_watermark(spec, state, me, batch_watermark(batch))
+            return (state, shuffle_bytes), None
+
+        def sync_round(carry, round_in):
+            chunk, wm_on = round_in
+            state, shuffle_bytes, sync_bytes = carry
+            (state, shuffle_bytes), _ = jax.lax.scan(
+                fold_step, (state, shuffle_bytes), chunk
+            )
+            merged = jnp.where(wm_on, jax.lax.pmax(state.progress, "data"),
+                               state.progress)
+            state = dataclasses.replace(state, progress=merged)
+            sync_bytes = sync_bytes + jnp.where(wm_on, wm_bytes, 0.0)
+            return (state, shuffle_bytes, sync_bytes), None
+
+        n_steps = sched.shape[1]
+        n_rounds = n_steps // sync_every
+        chunks = (
+            sched.T[: n_rounds * sync_every]
+            .reshape(n_rounds, sync_every, S)
+            .astype(jnp.int32)
+        )
+        zero = compat.pvary(jnp.float32(0.0), ("data",))
+        (state, shuffle_bytes, sync_bytes), _ = jax.lax.scan(
+            sync_round, (state, zero, zero), (chunks, wm_sync[:n_rounds])
+        )
+
+        def read(w):
+            (cnt, key), ok = W.shard_topk_read(
+                spec, state, w, table0, shards.num_keys, "data", k=1
+            )
+            val = jnp.stack([cnt[0], key[0].astype(jnp.float32)])
+            return jnp.where(ok, 1.0, 0.0), val
+
+        oks, vals = jax.vmap(read)(first_window + jnp.arange(n_windows))
+        return oks[None], vals[None], shuffle_bytes[None], sync_bytes[None]
+
+    log_specs = jax.tree.map(lambda _: P("data"), EventBatch(*([0] * 7)))
+    return jax.jit(
+        compat.shard_map(
+            node_fn,
+            mesh=mesh,
+            in_specs=(log_specs, P("data"), P(), P()),
+            out_specs=(P("data"), P("data"), P("data"), P("data")),
         )
     )
 

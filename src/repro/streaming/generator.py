@@ -30,11 +30,26 @@ class NexmarkConfig:
     rate_per_partition: float = 10_000.0  # events / second (event time)
     seed: int = 0
     base_ts: int = 0
-    # zipf exponent of per-partition load: partition p carries a
+    # zipf exponent of per-partition LOAD: partition p carries a
     # (p+1)^-skew fraction of valid events (0 = uniform, every event valid).
     # Batch shapes and spans are unchanged — cold partitions just pad with
     # invalid events, spread evenly so watermarks still track the span.
+    # This shapes WHERE events land, not WHICH keys are hot — that is
+    # ``key_skew`` below.
     skew: float = 0.0
+    # auction-id (key) domain size: bids/auctions draw ids in
+    # [0, num_auctions).  The default reproduces the historical generator
+    # bit-for-bit; raise it to stress the keyed/sharded dataplane at
+    # realistic cardinalities (docs/protocol.md §6).
+    num_auctions: int = 1000
+    # zipf exponent of KEY popularity: with key_skew == 0 auction ids are
+    # uniform (the historical behaviour, bit-identical draws); with s > 0
+    # ids follow the inverse CDF of the continuous power law x^-s on
+    # [1, num_auctions + 1), so id k is drawn with probability ~ (k+1)^-s —
+    # hot keys are the LOW ids, everywhere in every partition.  Orthogonal
+    # to ``skew``, which starves whole partitions of events but leaves the
+    # conditional key distribution untouched.
+    key_skew: float = 0.0
 
     @property
     def batch_span_ms(self) -> float:
@@ -60,7 +75,21 @@ def _gen_batch(cfg: NexmarkConfig, partition: jax.Array, batch_idx: jax.Array) -
     lane = jnp.arange(B) % 50
     kind = jnp.where(lane == 0, KIND_PERSON, jnp.where(lane < 4, KIND_AUCTION, KIND_BID))
 
-    auction = jax.random.randint(k_auct, (B,), 0, 1000).astype(jnp.uint32)
+    if cfg.key_skew == 0.0:
+        # uniform ids — the exact historical draw (bit-identical at defaults)
+        auction = jax.random.randint(k_auct, (B,), 0, cfg.num_auctions).astype(jnp.uint32)
+    else:
+        # zipf-like hot keys: inverse CDF of the continuous power law x^-s
+        # on [1, N+1); id = floor(x) - 1 is drawn with mass ~ (id+1)^-s
+        N, s = float(cfg.num_auctions), cfg.key_skew
+        u = jax.random.uniform(k_auct, (B,))
+        if s == 1.0:
+            x = jnp.exp(u * jnp.log(N + 1.0))
+        else:
+            x = (u * ((N + 1.0) ** (1.0 - s) - 1.0) + 1.0) ** (1.0 / (1.0 - s))
+        auction = jnp.clip(
+            jnp.floor(x) - 1.0, 0.0, N - 1.0
+        ).astype(jnp.uint32)
     # Nexmark assigns categories to auctions round-robin -> derive from id.
     category = (auction % NUM_CATEGORIES).astype(jnp.int32)
     price = jnp.exp(jax.random.normal(k_price, (B,)) * 1.0 + 4.0).astype(jnp.float32)

@@ -399,3 +399,25 @@ def make_q5(
         oracle=oracle,
         out_width=2,
     )
+
+
+def q5_hot_oracle(
+    log: EventBatch, wid, assigner: WindowAssigner, num_keys: int
+) -> jax.Array:
+    """Sparse Q5 ground truth over the FULL auction-id domain — the oracle
+    for the hash-sharded keyed dataplane (docs/protocol.md §6), which routes
+    real ids instead of bucketing them ``% num_auctions`` like
+    :func:`make_q5`.  Segment-sum instead of a ``[B, C]`` one-hot, so it
+    stays cheap at C = 1e6+.  Returns ``[count, auction_id]``; ties break to
+    the lowest id (``argmax``), the same rule :func:`W.shard_topk_read`
+    implements shard-side, and counts are small integers exact in f32 — so
+    sharded reads are byte-identical to this oracle.
+    """
+    m = log.valid & (log.kind == KIND_BID) & assigner.contains(wid, log.ts)
+    cnts = jax.ops.segment_sum(
+        m.astype(jnp.float32).reshape(-1),
+        log.auction.astype(jnp.int32).reshape(-1),
+        num_segments=num_keys,
+    )
+    hot = jnp.argmax(cnts)
+    return jnp.stack([cnts[hot], hot.astype(jnp.float32)])
