@@ -18,17 +18,66 @@ machine-readable JSON (``{"sections": {section: [row, ...]}}``) to
 ``--trace-out DIR`` additionally exports obs-on traces (JSONL + Chrome
 trace-event JSON for Perfetto) from the chaos and elasticity sections.
 
+``--summary`` skips running anything and instead merges every committed
+``BENCH_pr*.json`` into one perf-trajectory table: per row, the first and
+latest recorded value and the delta across PRs.
+
 Usage: PYTHONPATH=src python -m benchmarks.run [--quick] [--only SECTION]
                                                [--json PATH] [--trace-out DIR]
+       PYTHONPATH=src python -m benchmarks.run --summary
 """
 import argparse
 import json
 import platform
+import re
 import sys
 import traceback
 from pathlib import Path
 
-BENCH_JSON = Path(__file__).resolve().parents[1] / "BENCH_pr9.json"
+REPO = Path(__file__).resolve().parents[1]
+BENCH_JSON = REPO / "BENCH_pr10.json"
+
+
+def summarize(root: Path = REPO) -> list[str]:
+    """The cross-PR perf trajectory: merge all ``BENCH_pr*.json`` (in PR
+    order) and render one line per row name with first/last/delta of
+    ``us_per_call`` plus the latest derived fields.  Returns the lines so
+    tests can assert on them; ``--summary`` prints them."""
+    files = sorted(
+        root.glob("BENCH_pr*.json"),
+        key=lambda p: int(re.search(r"pr(\d+)", p.name).group(1)),
+    )
+    # row name -> [(pr, us_per_call, derived), ...] in PR order
+    trail: dict[str, list[tuple[int, float, str]]] = {}
+    sections: dict[str, str] = {}  # row name -> section (latest wins)
+    for path in files:
+        pr = int(re.search(r"pr(\d+)", path.name).group(1))
+        try:
+            doc = json.loads(path.read_text())
+        except (json.JSONDecodeError, OSError):
+            continue
+        for section, rows in (doc.get("sections") or {}).items():
+            for row in rows:
+                name = row.get("name")
+                if not isinstance(name, str):
+                    continue
+                sections[name] = section
+                trail.setdefault(name, []).append(
+                    (pr, float(row.get("us_per_call") or 0.0),
+                     str(row.get("derived") or ""))
+                )
+    lines = [f"# perf trajectory over {len(files)} benchmark files "
+             f"({', '.join(p.name for p in files)})",
+             "section,name,first_pr,last_pr,first_us,last_us,delta_pct,derived"]
+    for name in sorted(trail, key=lambda n: (sections[n], n)):
+        t = trail[name]
+        (pr0, us0, _), (pr1, us1, derived) = t[0], t[-1]
+        delta = ((us1 - us0) / us0 * 100.0) if us0 else 0.0
+        lines.append(
+            f"{sections[name]},{name},{pr0},{pr1},{us0:.3f},{us1:.3f},"
+            f"{delta:+.1f}%,{derived}"
+        )
+    return lines
 
 
 def main() -> None:
@@ -40,7 +89,13 @@ def main() -> None:
     ap.add_argument("--trace-out", type=str, default=None,
                     help="directory for obs-on trace exports (JSONL + Chrome "
                          "trace JSON) from the chaos and elasticity sections")
+    ap.add_argument("--summary", action="store_true",
+                    help="print the cross-PR perf trajectory from the "
+                         "committed BENCH_pr*.json files and exit")
     args = ap.parse_args()
+    if args.summary:
+        print("\n".join(summarize()))
+        return
 
     from benchmarks import (
         chaos,

@@ -1,0 +1,189 @@
+#!/usr/bin/env python
+"""Perf-regression gate: compare a fresh benchmark JSON against the
+committed trajectory (``BENCH_pr*.json``).
+
+The benchmark rows carry their numbers in the ``derived`` string as
+``k=v;k=v`` fields.  This gate parses both files, matches rows by name, and
+checks the regression-sensitive metrics against per-metric tolerance bands:
+
+* **latency** (``avg_ms``/``p50_ms``/``p99_ms``/``path_p*_ms``/
+  ``ttr_max_ms``/``settle_ms``) — sim-time numbers, deterministic for a
+  given config, so the same-provenance band is tight;
+* **bytes** (``wire_mb``, ``sync*bytes*``, ``shipped`` …) — sync-plane
+  traffic, also deterministic per config;
+* **overhead** (``overhead_pct``) — wall-clock, noisy: rows whose committed
+  value is inside the absolute ceiling (the documented <5% budget plus
+  measurement slack) must stay under both the ceiling and 1.5x their
+  committed value; rows committed above the ceiling (the baseline's
+  tracing overhead on a near-free sim is inherently large) are gated on
+  their trajectory instead.
+
+Quick runs and full runs use different workload sizes, so when the two
+files' section provenance differs (``section_meta.quick``) the ratio bands
+widen to an order-of-magnitude sanity check instead of a tight gate.
+Rows or sections present on only one side are skipped (the gate is for
+regressions, not coverage).
+
+Usage:
+  python scripts/check_bench.py --fresh /tmp/bench.json \
+      [--committed BENCH_pr10.json] [--sections chaos,obs]
+
+Exit 0 when every checked metric is in band; exit 1 with a per-metric
+report otherwise.  ``scripts/test.sh bench`` runs the cheap chaos section
+quick and gates it through here.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+
+# metric-name pattern -> band class; first match wins
+PATTERNS = (
+    (re.compile(r"^(avg|p50|p99)_ms$"), "latency"),
+    (re.compile(r"^(path|hops)_p\d+(_ms)?$"), "latency"),
+    (re.compile(r"^(ttr_max|settle)_ms$"), "latency"),
+    (re.compile(r"^overhead_pct$"), "overhead"),
+    (re.compile(r"(bytes|_mb)", re.IGNORECASE), "bytes"),
+)
+# (relative tolerance same-provenance, relative tolerance cross-provenance,
+#  absolute slack added on top)
+BANDS = {
+    "latency": (0.30, 4.0, 5.0),
+    "bytes": (0.30, 4.0, 1.0),
+}
+# the documented telemetry/monitor budget is <5%; wall-clock measurement of
+# a few-ms delta is noisy, so the gate allows the budget plus slack
+OVERHEAD_CEILING_PCT = 8.0
+
+
+def parse_derived(derived: str) -> dict[str, float]:
+    """The numeric ``k=v`` fields of a row's derived string (non-numeric
+    fields like ``audit=ok`` or ``ttr_ms=0:123,...`` are skipped)."""
+    out: dict[str, float] = {}
+    for part in derived.split(";"):
+        k, sep, v = part.partition("=")
+        if not sep:
+            continue
+        try:
+            out[k.strip()] = float(v)
+        except ValueError:
+            continue
+    return out
+
+
+def load(path: Path) -> tuple[dict, dict]:
+    doc = json.loads(path.read_text())
+    rows = {
+        section: {r["name"]: r for r in rws if isinstance(r, dict) and "name" in r}
+        for section, rws in (doc.get("sections") or {}).items()
+    }
+    return rows, doc.get("section_meta") or {}
+
+
+def band_of(metric: str) -> str | None:
+    for pat, band in PATTERNS:
+        if pat.search(metric):
+            return band
+    return None
+
+
+def check(fresh_path: Path, committed_path: Path,
+          sections: list[str] | None = None) -> list[str]:
+    """Returns the list of violations (empty = gate passes)."""
+    fresh, fresh_meta = load(fresh_path)
+    committed, committed_meta = load(committed_path)
+    problems: list[str] = []
+    checked = 0
+    for section, rows in fresh.items():
+        if sections and section not in sections:
+            continue
+        base_rows = committed.get(section)
+        if not base_rows:
+            continue
+        same_provenance = (
+            bool(fresh_meta.get(section, {}).get("quick"))
+            == bool(committed_meta.get(section, {}).get("quick"))
+        )
+        for name, row in rows.items():
+            base = base_rows.get(name)
+            if base is None:
+                continue
+            got = parse_derived(row.get("derived", ""))
+            want = parse_derived(base.get("derived", ""))
+            for metric, new in got.items():
+                if metric not in want:
+                    continue
+                band = band_of(metric)
+                if band is None:
+                    continue
+                old = want[metric]
+                checked += 1
+                if band == "overhead":
+                    if old <= OVERHEAD_CEILING_PCT:
+                        # a row inside the ceiling must stay there — but a
+                        # commit near the ceiling gets 1.5x headroom so
+                        # measurement noise alone can't trip the gate
+                        if new > OVERHEAD_CEILING_PCT and new > old * 1.5:
+                            problems.append(
+                                f"{name}: {metric}={new:.1f} exceeds the "
+                                f"{OVERHEAD_CEILING_PCT:.0f}% ceiling "
+                                f"(committed {old:.1f})"
+                            )
+                    elif new > old * 3.0 + 5.0:
+                        # committed value already above the ceiling (e.g.
+                        # tracing overhead on the baseline's near-free sim):
+                        # gate the trajectory, not the absolute budget
+                        problems.append(
+                            f"{name}: {metric}={new:.1f} regressed past 3x "
+                            f"the committed {old:.1f}"
+                        )
+                    continue
+                rel_same, rel_cross, abs_slack = BANDS[band]
+                tol = rel_same if same_provenance else rel_cross
+                limit = old * (1.0 + tol) + abs_slack
+                if new > limit:
+                    prov = "same" if same_provenance else "quick/full mismatch"
+                    problems.append(
+                        f"{name}: {metric}={new:.2f} regressed past "
+                        f"{limit:.2f} (committed {old:.2f}, band +{tol:.0%} "
+                        f"[{prov} provenance] + {abs_slack:g} abs)"
+                    )
+    print(f"check_bench: {checked} metrics checked against "
+          f"{committed_path.name}, {len(problems)} regression(s)")
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh", type=Path, required=True,
+                    help="benchmark JSON produced by this run")
+    ap.add_argument("--committed", type=Path, default=None,
+                    help="baseline JSON (default: newest BENCH_pr*.json)")
+    ap.add_argument("--sections", type=str, default=None,
+                    help="comma-separated sections to gate (default: all "
+                         "sections present in both files)")
+    args = ap.parse_args(argv)
+    committed = args.committed
+    if committed is None:
+        cands = sorted(
+            REPO.glob("BENCH_pr*.json"),
+            key=lambda p: int(re.search(r"pr(\d+)", p.name).group(1)),
+        )
+        if not cands:
+            print("check_bench: no committed BENCH_pr*.json to compare against")
+            return 0
+        committed = cands[-1]
+    sections = args.sections.split(",") if args.sections else None
+    problems = check(args.fresh, committed, sections)
+    for p in problems:
+        print(f"  REGRESSION {p}")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

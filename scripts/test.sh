@@ -8,6 +8,7 @@
 #   scripts/test.sh topo       # fast dissemination-topology suite only
 #   scripts/test.sh keyed      # keyed-sharding + segment-reduce suite (8 vdev)
 #   scripts/test.sh obs        # telemetry smoke: export + audit a chaos run
+#   scripts/test.sh bench      # quick chaos bench + perf-regression gate
 #   scripts/test.sh all        # tier-1, then slow, multidevice, chaos, obs
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -51,6 +52,16 @@ multidevice() {
   XLA_FLAGS="--xla_force_host_platform_device_count=8 ${XLA_FLAGS:-}" \
     python -m pytest -q -m multidevice "$@"
 }
+# perf-regression gate: run the cheap chaos section quick, compare the
+# sim-deterministic metrics (latency percentiles, wire bytes) against the
+# committed BENCH_pr*.json trajectory (scripts/check_bench.py bands)
+bench() {
+  local tmp
+  tmp="$(mktemp -d)"
+  trap 'rm -rf "$tmp"' RETURN
+  python -m benchmarks.run --quick --only chaos --json "$tmp/bench.json"
+  python scripts/check_bench.py --fresh "$tmp/bench.json" --sections chaos
+}
 
 case "${1:-tier1}" in
   tier1) tier1 "${@:2}" ;;
@@ -59,7 +70,8 @@ case "${1:-tier1}" in
   topo) topo "${@:2}" ;;
   keyed) keyed "${@:2}" ;;
   obs) obs ;;
+  bench) bench ;;
   multidevice) multidevice "${@:2}" ;;
   all) tier1 "${@:2}"; slow "${@:2}"; multidevice "${@:2}"; chaos "${@:2}"; obs ;;
-  *) echo "usage: $0 [tier1|slow|chaos|topo|keyed|multidevice|all|obs]" >&2; exit 2 ;;
+  *) echo "usage: $0 [tier1|slow|chaos|topo|keyed|multidevice|all|obs|bench]" >&2; exit 2 ;;
 esac

@@ -154,7 +154,7 @@ def default_fold_schedule(num_shards: int, num_batches: int) -> np.ndarray:
 def build_keyed_pipeline(
     mesh, shards: W.KeyShards, *, window_len: int = 1000,
     num_slots: int = 16, hop: int | None = None, sync_every: int = 4,
-    n_windows: int = 8, first_window: int = 0,
+    n_windows: int = 8, first_window: int = 0, provenance: bool = False,
 ):
     """Hash-sharded keyed dataplane (docs/protocol.md §6): per-auction bid
     counts + cross-shard hot-item reads over a key domain too large for any
@@ -183,6 +183,16 @@ def build_keyed_pipeline(
     slot deltas to reconcile); both modeled byte counters come back as
     outputs.  Final read: :func:`W.shard_topk_read` per window — one
     ``[S]``-candidate gather, never the full key range.
+
+    With ``provenance=True`` the jitted fn returns a fifth output: each
+    device's i32 ``[S]`` **ingest frontier** — the max event timestamp among
+    the keyed lanes it folded from each source device (``-2^31`` where a
+    source never routed it a bid).  This is the dataplane analog of the sync
+    plane's progress lattice: the host can tell which *source's* routed
+    lanes gate an owner's window close, the per-lane provenance the
+    critical-path analyzer reconstructs for the coordination harness
+    (docs/observability.md §5).  Default stays the 4-output signature with
+    zero added work.
     """
     S = shards.num_shards
     assigner = as_assigner(window_len, hop if hop else window_len // 2)
@@ -202,7 +212,7 @@ def build_keyed_pipeline(
         )
 
         def fold_step(carry, sched_col):
-            state, shuffle_bytes = carry
+            state, shuffle_bytes, prov = carry
             batch = jax.tree.map(lambda x: x[sched_col[me]], log0)
             is_bid = batch.valid & (batch.kind == KIND_BID)
             owner = shards.shard_of(batch.auction)
@@ -224,20 +234,26 @@ def build_keyed_pipeline(
                 batch_idx=bi, amounts=jnp.ones((S * B,), jnp.float32),
                 keys=r_loc.reshape(-1),
             )
+            if provenance:
+                # ingest frontier: max event ts among the lanes row r (source
+                # device r) routed to me this step — flag-static, so the
+                # default build traces no extra ops
+                lane_ts = jnp.where(r_mask, r_ts, jnp.int32(-(2**31)))
+                prov = jnp.maximum(prov, lane_ts.max(axis=1))
             state = W.increment_watermark(spec, state, me, batch_watermark(batch))
-            return (state, shuffle_bytes), None
+            return (state, shuffle_bytes, prov), None
 
         def sync_round(carry, round_in):
             chunk, wm_on = round_in
-            state, shuffle_bytes, sync_bytes = carry
-            (state, shuffle_bytes), _ = jax.lax.scan(
-                fold_step, (state, shuffle_bytes), chunk
+            state, shuffle_bytes, sync_bytes, prov = carry
+            (state, shuffle_bytes, prov), _ = jax.lax.scan(
+                fold_step, (state, shuffle_bytes, prov), chunk
             )
             merged = jnp.where(wm_on, jax.lax.pmax(state.progress, "data"),
                                state.progress)
             state = dataclasses.replace(state, progress=merged)
             sync_bytes = sync_bytes + jnp.where(wm_on, wm_bytes, 0.0)
-            return (state, shuffle_bytes, sync_bytes), None
+            return (state, shuffle_bytes, sync_bytes, prov), None
 
         n_steps = sched.shape[1]
         n_rounds = n_steps // sync_every
@@ -247,8 +263,11 @@ def build_keyed_pipeline(
             .astype(jnp.int32)
         )
         zero = compat.pvary(jnp.float32(0.0), ("data",))
-        (state, shuffle_bytes, sync_bytes), _ = jax.lax.scan(
-            sync_round, (state, zero, zero), (chunks, wm_sync[:n_rounds])
+        prov0 = compat.pvary(
+            jnp.full((S,), -(2**31), jnp.int32), ("data",)
+        )
+        (state, shuffle_bytes, sync_bytes, prov), _ = jax.lax.scan(
+            sync_round, (state, zero, zero, prov0), (chunks, wm_sync[:n_rounds])
         )
 
         def read(w):
@@ -259,15 +278,19 @@ def build_keyed_pipeline(
             return jnp.where(ok, 1.0, 0.0), val
 
         oks, vals = jax.vmap(read)(first_window + jnp.arange(n_windows))
-        return oks[None], vals[None], shuffle_bytes[None], sync_bytes[None]
+        out = (oks[None], vals[None], shuffle_bytes[None], sync_bytes[None])
+        if provenance:
+            out += (prov[None],)
+        return out
 
+    n_out = 5 if provenance else 4
     log_specs = jax.tree.map(lambda _: P("data"), EventBatch(*([0] * 7)))
     return jax.jit(
         compat.shard_map(
             node_fn,
             mesh=mesh,
             in_specs=(log_specs, P("data"), P(), P()),
-            out_specs=(P("data"), P("data"), P("data"), P("data")),
+            out_specs=tuple(P("data") for _ in range(n_out)),
         )
     )
 

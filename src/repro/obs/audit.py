@@ -92,7 +92,9 @@ def audit(
     the buffer when one is passed) flags truncation."""
     if isinstance(events, TraceBuffer):
         dropped = events.dropped
-        events = events.events()
+        # spool + resident ring: a spill-configured buffer still certifies
+        # long runs — spilled records are on disk, not dropped
+        events = events.all_events() if events.spilled else events.events()
     evs = sorted(events, key=lambda e: e.t_ms)
     v: list[str] = []
     metrics: dict = {}

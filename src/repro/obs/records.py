@@ -15,7 +15,11 @@ the run it observes — determinism is what makes the trace auditable
 The :class:`TraceBuffer` is a bounded ring: long chaos sweeps cannot grow
 memory without bound — the oldest records fall off and ``dropped`` counts
 them, which the auditor treats as "trace truncated" (it refuses to certify
-invariants it cannot see).
+invariants it cannot see).  With a ``spill_path`` configured
+(``SimConfig.obs_spill_path``) evicted records stream to a JSONL spool
+instead of vanishing: resident memory stays bounded at ``cap`` records while
+``spilled_events()`` + the ring reconstruct the full stream, so long runs
+stay auditable (docs/observability.md §3).
 """
 from __future__ import annotations
 
@@ -58,20 +62,53 @@ def mkargs(**kw) -> tuple:
 
 
 class TraceBuffer:
-    """Bounded ring of :class:`TraceEvent`; drops the oldest on overflow."""
+    """Bounded ring of :class:`TraceEvent`; drops the oldest on overflow.
 
-    def __init__(self, cap: int = 1 << 16):
+    With ``spill_path`` set the oldest records are streamed to a JSONL spool
+    file on eviction instead of being discarded: resident memory stays
+    bounded at ``cap`` while the spool + ring together hold the complete
+    stream (``spilled`` counts spooled records; ``dropped`` stays 0).  The
+    spool uses the same line format as :func:`to_jsonl`, so
+    :func:`from_jsonl` round-trips it and the auditor can replay the whole
+    run (docs/observability.md §3)."""
+
+    def __init__(self, cap: int = 1 << 16, spill_path: str = ""):
         self.cap = int(cap)
-        self._buf: deque[TraceEvent] = deque(maxlen=self.cap)
+        self.spill_path = str(spill_path)
+        self._buf: deque[TraceEvent] = (
+            deque() if self.spill_path else deque(maxlen=self.cap)
+        )
         self.total = 0  # records ever appended
+        self.spilled = 0  # records evicted to the spool file
+        self._spill_fh = None
 
     def append(self, ev: TraceEvent) -> None:
         self.total += 1
         self._buf.append(ev)
+        if self.spill_path and len(self._buf) > self.cap:
+            self._spill(self._buf.popleft())
+
+    def _spill(self, ev: TraceEvent) -> None:
+        if self._spill_fh is None:
+            self._spill_fh = open(self.spill_path, "w")
+        self._spill_fh.write(event_json(ev) + "\n")
+        self.spilled += 1
+
+    def flush_spill(self) -> None:
+        if self._spill_fh is not None:
+            self._spill_fh.flush()
+
+    def spilled_events(self) -> list[TraceEvent]:
+        """Re-read the spool: the records evicted so far, oldest first."""
+        if not self.spilled:
+            return []
+        self.flush_spill()
+        with open(self.spill_path) as fh:
+            return from_jsonl(fh.read())
 
     @property
     def dropped(self) -> int:
-        return self.total - len(self._buf)
+        return self.total - len(self._buf) - self.spilled
 
     def __len__(self) -> int:
         return len(self._buf)
@@ -82,9 +119,18 @@ class TraceBuffer:
     def events(self) -> tuple[TraceEvent, ...]:
         return tuple(self._buf)
 
+    def all_events(self) -> list[TraceEvent]:
+        """Spool + resident ring: the complete appended stream (equal to
+        ``events()`` when nothing spilled)."""
+        return self.spilled_events() + list(self._buf)
+
     def clear(self) -> None:
         self._buf.clear()
         self.total = 0
+        self.spilled = 0
+        if self._spill_fh is not None:
+            self._spill_fh.close()
+            self._spill_fh = None
 
 
 # ---------------------------------------------------------------------------
@@ -93,7 +139,23 @@ class TraceBuffer:
 
 
 def _jsonable(v):
-    return v if isinstance(v, (int, float, str, bool)) or v is None else repr(v)
+    if isinstance(v, (int, float, str, bool)) or v is None:
+        return v
+    if isinstance(v, (tuple, list)):
+        # recursive, so nested arg payloads (pids, peers, groups, wm vectors)
+        # survive a JSONL round-trip instead of flattening to repr strings
+        return [_jsonable(x) for x in v]
+    return repr(v)
+
+
+def event_json(ev: TraceEvent) -> str:
+    """The canonical key-sorted JSON line of one record (shared by
+    :func:`to_jsonl` and the :class:`TraceBuffer` spill spool)."""
+    d = dataclasses.asdict(ev)
+    d["args"] = [[k, _jsonable(v)] for k, v in ev.args]
+    for k in ("node", "src", "dst"):
+        d[k] = _jsonable(d[k])
+    return json.dumps(d, sort_keys=True)
 
 
 def to_jsonl(events: Iterable[TraceEvent], dropped: int = 0) -> str:
@@ -103,12 +165,31 @@ def to_jsonl(events: Iterable[TraceEvent], dropped: int = 0) -> str:
     lines = [json.dumps({"meta": "holon-trace-v1", "dropped": int(dropped)},
                         sort_keys=True)]
     for ev in events:
-        d = dataclasses.asdict(ev)
-        d["args"] = [[k, _jsonable(v)] for k, v in ev.args]
-        for k in ("node", "src", "dst"):
-            d[k] = _jsonable(d[k])
-        lines.append(json.dumps(d, sort_keys=True))
+        lines.append(event_json(ev))
     return "\n".join(lines) + "\n"
+
+
+def _untuple(v):
+    return tuple(_untuple(x) for x in v) if isinstance(v, list) else v
+
+
+def from_jsonl(text: str) -> list[TraceEvent]:
+    """Parse :func:`to_jsonl` / spill-spool output back into records.
+
+    Inverse of :func:`event_json` for every value the runtimes record (JSON
+    scalars and nested tuples; tuples come back as tuples).  Meta header
+    lines are skipped, so a full export and a bare spool both parse."""
+    out: list[TraceEvent] = []
+    for line in text.splitlines():
+        line = line.strip()
+        if not line:
+            continue
+        d = json.loads(line)
+        if "meta" in d and "kind" not in d:
+            continue
+        d["args"] = tuple((k, _untuple(v)) for k, v in d["args"])
+        out.append(TraceEvent(**d))
+    return out
 
 
 def _pid(endpoint) -> int:

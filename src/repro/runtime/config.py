@@ -73,6 +73,19 @@ class SimConfig:
     obs: bool = False  # structured span tracing + metrics registry
     obs_trace_cap: int = 1 << 16  # bounded trace ring size (records)
     obs_snapshot_ms: float = 500.0  # registry snapshot period (sim-time)
+    # stream ring-evicted records to this JSONL spool instead of dropping
+    # them: memory stays bounded at obs_trace_cap while the full stream
+    # stays auditable ("" = no spill, evictions count as dropped)
+    obs_spill_path: str = ""
+    # --- online protocol monitor (obs/monitor.py, docs/observability.md §6) —
+    # a passive Telemetry subscriber checking invariants + health signals as
+    # records are appended.  Implies ``obs``; monitoring never draws RNG or
+    # schedules sim events, so runs stay byte-identical with it on or off.
+    obs_monitor: bool = False
+    obs_stall_ms: float = 5000.0  # [frontier-stall] alert after this quiet gap
+    obs_slo_ms: float = 0.0  # emit-latency SLO; 0 disables [slo-burn]
+    obs_slo_frac: float = 0.5  # [slo-burn] when > this frac of recent emits miss
+    obs_sync_budget: float = 0.0  # sync bytes/s budget; 0 disables [sync-burn]
 
     # --- Flink-like centralized baseline (paper §5.1 config) ---
     flink_hb_interval_ms: float = 4000.0  # paper: 4 s

@@ -96,6 +96,13 @@ class FlinkHarness:
         self.last_ckpt_idx = [0] * P
         self.node_of = [p % cfg.num_nodes for p in range(P)]
         self.node_alive = [True] * cfg.num_nodes
+        # online protocol monitor — same passive subscription as the Holon
+        # harness, so both runtimes alert through one code path
+        self.monitor = None
+        if cfg.obs_monitor:
+            from repro.obs.monitor import OnlineMonitor
+            self.monitor = OnlineMonitor.from_config(cfg)
+            self.monitor.attach(self.obs)
 
     # ---- per-partition processing loop -------------------------------------
     def _loop_part(self, pid: int):
@@ -137,6 +144,14 @@ class FlinkHarness:
         for wid in range(closed):
             if (wid, pid) not in self.forwarded:
                 self.forwarded.add((wid, pid))
+                if self.obs.on:
+                    # up-tree forward: the leaf half of the slowest-path
+                    # causality critical-path analysis reconstructs
+                    # (obs/critpath.py pairs it with shuffle.arrive)
+                    self.obs.event(
+                        "shuffle.fwd", node=self.node_of[pid], partition=pid,
+                        window=wid, dst=0, hops=self.tree_depth,
+                    )
                 # tree_depth reliable hops toward the root (node 0): each
                 # hop pays network latency + the output-buffer flush, plus
                 # one RTO per lost transmission; a partition parks the
@@ -154,6 +169,11 @@ class FlinkHarness:
             return
         s = self.arrived.setdefault(wid, set())
         s.add(pid)
+        if self.obs.on:
+            # root-side arrival: the LAST arrive per window is the slowest
+            # path the paper's latency claim is about (obs/critpath.py)
+            self.obs.event("shuffle.arrive", node=0, partition=pid, window=wid,
+                           src=self.node_of[pid])
         if len(s) >= self.cfg.num_partitions and wid not in self.emitted:
             self.emitted.add(wid)
             fresh = self.consumer.emit(self.sim.now, 0, wid, None)
@@ -303,6 +323,7 @@ class FlinkHarness:
         horizon = horizon_ms if horizon_ms is not None else cfg.horizon_ms + 5000.0
         self.obs.start_snapshots()
         self.sim.run(until=horizon)
+        self.obs.buf.flush_spill()
         self.consumer.net_stats = self.net.class_stats()
         return self.consumer
 

@@ -479,6 +479,10 @@ class HolonNode:
             obs.event(
                 "exec.batch", node=self.nid, partition=pid, status="ok",
                 t_end_ms=now + cost, idx=m.idx - 1, queue_ms=queue_ms,
+                # the batch watermark this fold raised progress[pid] to —
+                # the provenance critical-path analysis replays the global
+                # watermark lattice from (obs/critpath.py)
+                wm=int(self.h.batch_wm[pid, m.idx - 1]),
             )
             reg = obs.registry
             reg.counter("batches_folded", node=self.nid).inc()
@@ -768,6 +772,14 @@ class HolonHarness:
         # per-(partition, batch) valid-event fraction: drives the modeled
         # processing cost, so load skew translates into node load
         self.valid_frac = np.asarray(self._log_np.valid, np.float64).mean(axis=-1)
+        # per-(partition, batch) watermark — host mirror of the dataplane's
+        # batch_watermark(), recorded on exec.batch spans so the critical-
+        # path analyzer (obs/critpath.py) can replay the progress lattice
+        # exactly; pure derived data, so it cannot perturb the run
+        self.batch_wm = np.where(
+            np.asarray(self._log_np.valid),
+            np.asarray(self._log_np.ts, np.int64), -(2 ** 31)
+        ).max(axis=-1)
         self.sim = Sim()
         # one telemetry hub per run (docs/observability.md): the fabric,
         # storage, consumer, and every node record into the same bounded
@@ -830,6 +842,14 @@ class HolonHarness:
         self._assign_cache: dict[tuple[int, ...], tuple[int, ...]] = {}
         # (requester, server) log of §3.1 bootstrap handshakes (test probe)
         self.bootstrap_served: list[tuple[int, int]] = []
+        # online protocol monitor (obs/monitor.py): a passive telemetry
+        # subscriber — alerts accumulate on self.monitor, the run itself is
+        # byte-identical with it on or off (docs/observability.md §6)
+        self.monitor = None
+        if cfg.obs_monitor:
+            from repro.obs.monitor import OnlineMonitor
+            self.monitor = OnlineMonitor.from_config(cfg)
+            self.monitor.attach(self.obs)
 
     def _subscribe(self, nid: int) -> None:
         self.unsubscribed.discard(nid)
@@ -990,6 +1010,7 @@ class HolonHarness:
         horizon = horizon_ms if horizon_ms is not None else self.cfg.horizon_ms + 5000.0
         self.obs.start_snapshots()
         self.sim.run(until=horizon)
+        self.obs.buf.flush_spill()
         # expose sync-bandwidth + fabric counters on the consumer (probe)
         self.consumer.sync_msgs = self.sync_msgs
         self.consumer.sync_nacks = self.sync_nacks

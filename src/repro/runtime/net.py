@@ -341,8 +341,8 @@ class NetworkFabric:
         self.link_bytes[link] = self.link_bytes.get(link, 0.0) + nbytes
         return st
 
-    def _record(self, src, dst, cls, nbytes, status, t_deliver=-1.0):
-        self.telemetry.net_msg(src, dst, cls, nbytes, status, t_deliver)
+    def _record(self, src, dst, cls, nbytes, status, t_deliver=-1.0, retries=0):
+        self.telemetry.net_msg(src, dst, cls, nbytes, status, t_deliver, retries)
 
     def _observe_delay(self, cls: str, delay: float) -> None:
         """Per-class delivery-latency histogram — the wire-time slice of the
@@ -431,7 +431,10 @@ class NetworkFabric:
             delay += self._sample_latency(prof, rng, latency_ms, floor)
         st = self._meter(src, dst, cls, nbytes * (1 + retries))
         st.retries += retries
-        self._record(src, dst, cls, nbytes, "ok", self.sim.now + delay)
+        # retries ride the record so critical-path analysis can split the
+        # delivery delay into wire time vs retransmit stalls (obs/critpath.py)
+        self._record(src, dst, cls, nbytes, "ok", self.sim.now + delay,
+                     retries=retries)
         self._observe_delay(cls, delay)
         self.sim.after(delay, deliver)
 

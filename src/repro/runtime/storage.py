@@ -43,6 +43,14 @@ class PartitionCheckpoint:
     epoch: int = 0
 
 
+def _progress_of(ckpt: PartitionCheckpoint) -> tuple:
+    """The snapshot's per-partition watermark vector (first shared spec's
+    progress — the one ``global_watermark`` reads); () when stateless."""
+    if ckpt.baseline is None or not len(ckpt.baseline):
+        return ()
+    return tuple(int(x) for x in ckpt.baseline[0][1])
+
+
 def _coverage(ckpt: PartitionCheckpoint) -> float:
     """Total gossip coverage of a checkpoint (sum of folded frontiers)."""
     if ckpt.baseline is None:
@@ -75,6 +83,10 @@ class CheckpointStorage:
                 "ckpt.apply", node="storage", partition=pid,
                 status="applied" if applied else "kept",
                 nxt_idx=stored.nxt_idx, epoch=stored.epoch,
+                # stored snapshot's progress vector (first shared spec):
+                # critical-path analysis restores adopted lanes from exactly
+                # what a later ckpt.get hands out (obs/critpath.py)
+                wm=_progress_of(stored),
             )
             self.obs.registry.counter("ckpt_puts", partition=pid).inc()
 

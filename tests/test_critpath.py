@@ -1,0 +1,184 @@
+"""Critical-path analysis tests (src/repro/obs/critpath.py,
+docs/observability.md §5).
+
+Three layers:
+
+* properties — on every tier-1 scenario family the analyzer reconstructs
+  exactly one path per accepted emission, each path is a lower bound on the
+  consumer-visible latency, phase attribution telescopes (phases sum to the
+  path length exactly) and no phase goes negative;
+* phase coverage — lossy/jittered links put real mass in the ``wire`` and
+  ``loss_stall`` phases; sparse topologies stretch hop counts relative to
+  all-to-all; the tree baseline attributes shuffle hops as wire time;
+* determinism — same-seed chaos runs serialize byte-identical reports.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+
+import pytest
+
+from repro.obs.critpath import PHASES, analyze, analyze_harness
+from repro.obs.records import TraceEvent, mkargs
+from repro.runtime import (
+    FailureScenario,
+    FlinkHarness,
+    HolonHarness,
+    Scenario,
+    SimConfig,
+)
+from repro.streaming import make_q7
+
+CFG = SimConfig(
+    num_nodes=3, num_partitions=4, num_batches=60, window_len=500,
+    sync_interval_ms=50.0, ckpt_interval_ms=300.0, obs=True,
+)
+HORIZON = CFG.horizon_ms + 10_000.0
+
+CHAOS_CFG = dataclasses.replace(
+    CFG, net_loss=0.05, net_jitter="uniform", net_jitter_ms=3.0
+)
+CHAOS_SCEN = (
+    Scenario("crash_and_partition")
+    .crash(1500.0, 0)
+    .partition(2500.0, (1,), (2,))
+    .heal(4000.0)
+    .restart(4500.0, 0)
+)
+
+SCENARIOS = {
+    "baseline": None,
+    "concurrent": FailureScenario.concurrent(t=2000.0),
+    "subsequent": FailureScenario.subsequent(t=1500.0),
+    "crash": FailureScenario.crash(t=2000.0),
+    "partition_heal": Scenario("ph").partition(2000.0, (0,), (1, 2)).heal(3500.0),
+    "elastic": Scenario("el").scale_out(2000.0, 3).scale_in(4000.0, 3),
+}
+
+
+def _q(cfg=CFG):
+    return make_q7(cfg.num_partitions, window_len=cfg.window_len,
+                   num_slots=cfg.num_slots)
+
+
+def _run(cfg=CFG, scenario=None, harness_cls=HolonHarness, horizon=HORIZON):
+    h = harness_cls(cfg, _q(cfg))
+    h.run(scenario, horizon_ms=horizon)
+    return h
+
+
+def _accepted(h) -> int:
+    return sum(1 for e in h.obs.buf.events()
+               if e.kind == "emit" and e.status == "accepted")
+
+
+def _check_properties(report, accepted: int):
+    """The §5 invariants every reconstructed path must satisfy."""
+    assert len(report.paths) == accepted
+    for p in report.paths:
+        assert p.path_ms <= p.latency_ms + 1e-6, p
+        assert sum(p.phases.values()) == pytest.approx(p.path_ms, abs=1e-6), p
+        assert all(v >= -1e-9 for v in p.phases.values()), p
+        assert set(p.phases) == set(PHASES)
+        assert p.hops >= 0 and p.t_emit_ms >= 0.0
+
+
+# ---------------------------------------------------------------------------
+# properties on every tier-1 scenario family
+# ---------------------------------------------------------------------------
+class TestHolonProperties:
+    @pytest.mark.parametrize("name", sorted(SCENARIOS))
+    def test_path_invariants(self, name):
+        h = _run(scenario=SCENARIOS[name])
+        report = analyze_harness(h)
+        assert report.system == "holon" and report.topology == "all"
+        _check_properties(report, _accepted(h))
+        s = report.summary()
+        assert s["n"] == len(report.paths) > 0
+        assert s["path_ms"]["max"] <= s["latency_ms"]["max"] + 1e-6
+
+    def test_recovery_phase_on_adopted_checkpoint(self):
+        # harness runs rarely leave an adopt elem as the gating lane (the
+        # thief's fresh folds overwrite it within a batch), so drive the
+        # adopt -> recovery attribution directly: an emission gated by a
+        # checkpoint-adopted lane charges the steal delay to ``recovery``
+        # and anchors at the stored checkpoint
+        evs = [
+            TraceEvent(t_ms=100.0, kind="ckpt.apply", node=0, partition=0,
+                       status="applied", args=mkargs(wm=(5,), nxt_idx=5)),
+            TraceEvent(t_ms=200.0, kind="steal.adopt", node=1, partition=0,
+                       status="ckpt"),
+            TraceEvent(t_ms=250.0, kind="emit", node=1, partition=0, window=0,
+                       status="accepted",
+                       args=mkargs(digest=1, latency_ms=300.0)),
+        ]
+        (p,) = analyze(evs).paths
+        assert p.phases["recovery"] == pytest.approx(100.0)  # adopt - ckpt
+        assert p.phases["queue"] == pytest.approx(50.0)  # emit - adopt
+        assert p.path_ms == pytest.approx(150.0) and p.hops == 1
+        assert p.origin == 0  # the checkpoint writer, not the thief
+
+    @pytest.mark.parametrize("name", ["baseline", "concurrent"])
+    def test_flink_path_invariants(self, name):
+        h = _run(scenario=SCENARIOS[name], harness_cls=FlinkHarness)
+        report = analyze_harness(h)
+        assert report.system == "flink" and report.topology == "tree"
+        _check_properties(report, _accepted(h))
+        # the static agg tree always pays shuffle hops: wire mass is real
+        assert sum(p.phases["wire"] for p in report.paths) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# phase coverage under chaos and across topologies
+# ---------------------------------------------------------------------------
+class TestPhaseCoverage:
+    def test_lossy_links_show_wire_and_loss_stall(self):
+        cfg = dataclasses.replace(CHAOS_CFG, net_loss=0.40)
+        h = _run(cfg, None)
+        report = analyze_harness(h)
+        _check_properties(report, _accepted(h))
+        assert sum(p.phases["wire"] for p in report.paths) > 0.0
+        assert sum(p.phases["loss_stall"] for p in report.paths) > 0.0
+
+    @pytest.mark.parametrize("topo", ["ring:2", "hypercube"])
+    def test_sparse_topologies_analyzed(self, topo):
+        cfg = dataclasses.replace(CFG, topology=topo)
+        h = _run(cfg, None)
+        report = analyze_harness(h)
+        assert report.topology == topo
+        _check_properties(report, _accepted(h))
+
+    def test_sparse_topology_stretches_hops(self):
+        # on a ring, progress from a far node relays through intermediates:
+        # max hop count is at least the all-to-all one
+        paths_all = analyze_harness(_run(CFG, None)).paths
+        ring = dataclasses.replace(CFG, topology="ring:1")
+        paths_ring = analyze_harness(_run(ring, None)).paths
+        assert max(p.hops for p in paths_ring) >= max(p.hops for p in paths_all)
+
+
+# ---------------------------------------------------------------------------
+# determinism
+# ---------------------------------------------------------------------------
+class TestDeterminism:
+    @pytest.mark.parametrize("harness_cls", [HolonHarness, FlinkHarness])
+    def test_same_seed_byte_identical_report(self, harness_cls):
+        r1 = analyze_harness(_run(CHAOS_CFG, CHAOS_SCEN, harness_cls))
+        r2 = analyze_harness(_run(CHAOS_CFG, CHAOS_SCEN, harness_cls))
+        assert r1.to_json() == r2.to_json()
+        assert len(r1.paths) > 0
+
+    def test_report_json_schema(self):
+        report = analyze_harness(_run())
+        doc = json.loads(report.to_json())
+        assert doc["meta"] == "holon-critpath-v1"
+        assert doc["system"] == "holon"
+        assert set(doc["summary"]["phase_ms"]) == set(PHASES)
+        for p in doc["paths"]:
+            assert set(p["phases"]) == set(PHASES)
+
+    def test_analyze_accepts_plain_event_list(self):
+        h = _run()
+        via_list = analyze(list(h.obs.buf.events()), cfg=h.cfg)
+        assert via_list.to_json() == analyze_harness(h).to_json()

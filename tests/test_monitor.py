@@ -1,0 +1,320 @@
+"""Online-monitor tests (src/repro/obs/monitor.py, docs/observability.md §6).
+
+Four layers:
+
+* equivalence — on every tier-1 scenario family (and on traces mutated to
+  seed each invariant violation) the monitor's online violation set equals
+  the post-hoc auditor's, id for id;
+* alert mutations — each health alert id (frontier-stall, straggler,
+  slo-burn, sync-burn) is driven to fire from a synthetic record stream:
+  the monitor is tested to *alert*, not just to stay quiet;
+* A/B identity — a run with the monitor attached is byte-identical (consumer
+  records and exported traces) to the same seed without it;
+* spill — the TraceBuffer JSONL spool keeps evicted records auditable:
+  round-trips are lossless and a spilled chaos run still audits clean.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.obs.audit import audit, audit_harness
+from repro.obs.monitor import AUDIT_IDS, OnlineMonitor, replay
+from repro.obs.records import TraceBuffer, TraceEvent, mkargs
+from repro.runtime import (
+    FailureScenario,
+    FlinkHarness,
+    HolonHarness,
+    Scenario,
+    SimConfig,
+)
+from repro.streaming import make_q7
+
+CFG = SimConfig(
+    num_nodes=3, num_partitions=4, num_batches=60, window_len=500,
+    sync_interval_ms=50.0, ckpt_interval_ms=300.0, obs=True,
+)
+MON_CFG = dataclasses.replace(CFG, obs_monitor=True)
+HORIZON = CFG.horizon_ms + 10_000.0
+
+CHAOS_CFG = dataclasses.replace(
+    MON_CFG, net_loss=0.05, net_jitter="uniform", net_jitter_ms=3.0
+)
+CHAOS_SCEN = (
+    Scenario("crash_and_partition")
+    .crash(1500.0, 0)
+    .partition(2500.0, (1,), (2,))
+    .heal(4000.0)
+    .restart(4500.0, 0)
+)
+
+SCENARIOS = {
+    "baseline": None,
+    "concurrent": FailureScenario.concurrent(t=2000.0),
+    "subsequent": FailureScenario.subsequent(t=1500.0),
+    "crash": FailureScenario.crash(t=2000.0),
+    "partition_heal": Scenario("ph").partition(2000.0, (0,), (1, 2)).heal(3500.0),
+    "elastic": Scenario("el").scale_out(2000.0, 3).scale_in(4000.0, 3),
+}
+
+
+def _q(cfg=CFG):
+    return make_q7(cfg.num_partitions, window_len=cfg.window_len,
+                   num_slots=cfg.num_slots)
+
+
+def _run(cfg=CFG, scenario=None, harness_cls=HolonHarness, horizon=HORIZON):
+    h = harness_cls(cfg, _q(cfg))
+    h.run(scenario, horizon_ms=horizon)
+    return h
+
+
+def _audit_ids(events, cfg) -> set:
+    """The auditor's violation set projected onto the shared id catalog."""
+    rep = audit(events, cfg=cfg)
+    return {i for i in AUDIT_IDS
+            if any(f"[{i}]" in v for v in rep.violations)}
+
+
+def _monitor_ids(events, cfg) -> set:
+    return replay(events, cfg=cfg).violation_ids()
+
+
+# ---------------------------------------------------------------------------
+# equivalence: online violation set == post-hoc auditor's
+# ---------------------------------------------------------------------------
+class TestEquivalence:
+    @pytest.mark.parametrize("name", sorted(SCENARIOS))
+    def test_holon_clean_scenarios(self, name):
+        h = _run(MON_CFG, SCENARIOS[name])
+        assert h.monitor is not None
+        # the subscription saw every appended record
+        assert h.monitor.fed == h.obs.buf.total > 0
+        assert h.monitor.violations() == []
+        assert audit_harness(h).ok
+
+    @pytest.mark.parametrize("name", ["baseline", "concurrent", "partition_heal"])
+    def test_flink_clean_scenarios(self, name):
+        h = _run(MON_CFG, SCENARIOS[name], harness_cls=FlinkHarness)
+        assert h.monitor is not None and h.monitor.fed == h.obs.buf.total
+        assert h.monitor.violations() == []
+        assert audit_harness(h).ok
+
+    def test_replay_equals_live_monitor(self):
+        h = _run(CHAOS_CFG, CHAOS_SCEN)
+        mon = replay(h.obs.buf.events(), cfg=h.cfg)
+        assert mon.violation_ids() == h.monitor.violation_ids()
+        assert mon.warning_ids() == h.monitor.warning_ids()
+
+
+# mutation helpers: seed each violation into a certified trace, then check
+# the monitor and the auditor flag the *same* id set
+def _clean_events():
+    h = _run(scenario=SCENARIOS["concurrent"])
+    assert audit_harness(h).ok
+    return list(h.obs.buf.events()), h.cfg
+
+
+def _mutate_duplicate(evs):
+    first = next(e for e in evs if e.kind == "emit" and e.status == "accepted")
+    return evs + [dataclasses.replace(first, t_ms=first.t_ms + 1.0)]
+
+
+def _mutate_digest(evs):
+    first = next(e for e in evs if e.kind == "emit" and e.status == "accepted")
+    return evs + [dataclasses.replace(
+        first, t_ms=first.t_ms + 1.0, status="duplicate",
+        args=mkargs(digest=12345, latency_ms=0.0),
+    )]
+
+
+def _mutate_frontier(evs):
+    applies = [e for e in evs if e.kind == "ckpt.apply"]
+    last = max(applies, key=lambda e: (e.t_ms, e.arg("nxt_idx", 0)))
+    return evs + [dataclasses.replace(
+        last, t_ms=last.t_ms + 1.0, args=mkargs(nxt_idx=0, epoch=0),
+    )]
+
+
+def _mutate_unacked(evs):
+    merge = next(e for e in evs
+                 if e.kind == "sync.recv" and e.status == "delta_merge"
+                 and e.arg("marker"))
+    return evs + [dataclasses.replace(merge, t_ms=merge.t_ms + 0.123)]
+
+
+def _mutate_domination(evs):
+    merge = next(e for e in evs
+                 if e.kind == "sync.recv" and e.status == "delta_merge")
+    return evs + [dataclasses.replace(
+        merge, t_ms=merge.t_ms + 0.125, args=mkargs(dominated=0, marker=0),
+    )]
+
+
+MUTATIONS = {
+    "exactly-once": _mutate_duplicate,
+    "exactly-once-digest": _mutate_digest,
+    "frontier-regression": _mutate_frontier,
+    "unacked-merge": _mutate_unacked,
+    "domination": _mutate_domination,
+}
+
+
+class TestMutationEquivalence:
+    def test_clean_trace_agrees_empty(self):
+        evs, cfg = _clean_events()
+        assert _monitor_ids(evs, cfg) == _audit_ids(evs, cfg) == set()
+
+    @pytest.mark.parametrize("name", sorted(MUTATIONS))
+    def test_mutated_trace_agrees(self, name):
+        evs, cfg = _clean_events()
+        mutated = MUTATIONS[name](evs)
+        want = _audit_ids(mutated, cfg)
+        assert want, f"{name}: auditor missed the seeded violation"
+        assert _monitor_ids(mutated, cfg) == want
+
+
+# ---------------------------------------------------------------------------
+# health alerts: each id is driven to fire from a synthetic stream
+# ---------------------------------------------------------------------------
+def _emit(t, wid, node=0, latency=1.0):
+    return TraceEvent(t_ms=t, kind="emit", node=node, partition=0, window=wid,
+                      status="accepted", args=mkargs(digest=wid,
+                                                     latency_ms=latency))
+
+
+class TestHealthAlerts:
+    def test_frontier_stall_fires_and_is_episodic(self):
+        mon = OnlineMonitor(stall_ms=100.0)
+        mon.feed(TraceEvent(t_ms=0.0, kind="exec.batch", node=0, partition=0,
+                            args=mkargs(wm=1, queue_ms=0.0)))
+        mon.feed(TraceEvent(t_ms=500.0, kind="hb.beacon", node=1))
+        assert mon.warning_ids() == {"frontier-stall"}
+        # still quiet: one alert per stall episode, not per record
+        mon.feed(TraceEvent(t_ms=600.0, kind="hb.beacon", node=1))
+        assert sum(1 for a in mon.alerts if a.id == "frontier-stall") == 1
+        # progress resets the episode; a fresh stall alerts again
+        mon.feed(TraceEvent(t_ms=650.0, kind="exec.batch", node=0, partition=0,
+                            args=mkargs(wm=2, queue_ms=0.0)))
+        mon.feed(TraceEvent(t_ms=1000.0, kind="hb.beacon", node=1))
+        assert sum(1 for a in mon.alerts if a.id == "frontier-stall") == 2
+        assert mon.violations() == []
+
+    def test_slo_burn_fires(self):
+        mon = OnlineMonitor(slo_ms=10.0, slo_frac=0.5)
+        for i in range(40):
+            mon.feed(_emit(float(i), i, latency=100.0))
+        assert "slo-burn" in mon.warning_ids()
+        assert mon.violations() == []
+
+    def test_slo_disabled_by_default(self):
+        mon = OnlineMonitor()  # slo_ms=0 disables the vote
+        for i in range(40):
+            mon.feed(_emit(float(i), i, latency=1e9))
+        assert "slo-burn" not in mon.warning_ids()
+
+    def test_sync_burn_fires(self):
+        mon = OnlineMonitor(sync_budget=10.0)
+        mon.feed(TraceEvent(t_ms=500.0, kind="net.msg", src=0, dst=1,
+                            cls="sync", status="ok", nbytes=100_000.0,
+                            t_end_ms=501.0))
+        # crossing into the next bucket closes the hot one -> alert
+        mon.feed(TraceEvent(t_ms=1500.0, kind="net.msg", src=0, dst=1,
+                            cls="sync", status="ok", nbytes=1.0,
+                            t_end_ms=1501.0))
+        assert "sync-burn" in mon.warning_ids()
+        assert mon.violations() == []
+
+    def test_straggler_fires(self):
+        # node 1's folds gate every emission at node 0: after a full origin
+        # window the monitor names node 1 a straggler peer
+        mon = OnlineMonitor(num_partitions=1)
+        for k in range(1, 71):
+            t = float(10 * k)
+            mon.feed(TraceEvent(t_ms=t, kind="exec.batch", node=1, partition=0,
+                                args=mkargs(wm=k, queue_ms=0.0)))
+            mon.feed(TraceEvent(t_ms=t + 1.0, kind="net.msg", src=1, dst=0,
+                                cls="sync", status="ok", nbytes=64.0,
+                                t_end_ms=t + 2.0))
+            mon.feed(TraceEvent(t_ms=t + 2.0, kind="sync.recv", node=0, src=1,
+                                status="delta_merge",
+                                args=mkargs(dominated=1, marker=0)))
+            mon.feed(_emit(t + 3.0, k))
+        assert "straggler" in mon.warning_ids()
+        assert mon.violations() == []
+
+    def test_alert_cap_counts_overflow(self):
+        mon = OnlineMonitor()
+        for i in range(2000):
+            mon._alert(float(i), "frontier-stall", "warn", "x")
+        assert len(mon.alerts) == mon.alerts.maxlen
+        assert mon.alerts_dropped == 2000 - mon.alerts.maxlen
+
+
+# ---------------------------------------------------------------------------
+# A/B identity: the monitor never perturbs the run
+# ---------------------------------------------------------------------------
+class TestMonitorPassivity:
+    @pytest.mark.parametrize("harness_cls", [HolonHarness, FlinkHarness])
+    def test_monitor_on_off_byte_identical(self, harness_cls):
+        off = dataclasses.replace(CHAOS_CFG, obs_monitor=False)
+        h_on = _run(CHAOS_CFG, CHAOS_SCEN, harness_cls)
+        h_off = _run(off, CHAOS_SCEN, harness_cls)
+        assert h_on.monitor is not None and h_off.monitor is None
+        assert h_on.obs.export_jsonl() == h_off.obs.export_jsonl()
+        c_on, c_off = h_on.consumer, h_off.consumer
+        assert sorted(c_on.records) == sorted(c_off.records)
+        for k in c_on.records:
+            a, b = c_on.records[k], c_off.records[k]
+            assert a.emit_time == b.emit_time and a.latency == b.latency
+            if a.value is not None:
+                assert np.array_equal(np.asarray(a.value), np.asarray(b.value))
+
+    def test_monitor_implies_obs(self):
+        cfg = dataclasses.replace(CFG, obs=False, obs_monitor=True)
+        h = _run(cfg)
+        assert h.obs.buf.total > 0
+        assert h.monitor.fed == h.obs.buf.total
+
+
+# ---------------------------------------------------------------------------
+# spill: the bounded ring streams evictions to a JSONL spool
+# ---------------------------------------------------------------------------
+class TestSpill:
+    def test_roundtrip_lossless(self, tmp_path):
+        spool = str(tmp_path / "spill.jsonl")
+        buf = TraceBuffer(cap=8, spill_path=spool)
+        evs = [TraceEvent(t_ms=float(i), kind="x", node=i % 3,
+                          args=mkargs(k=i, f=0.5 * i)) for i in range(50)]
+        for e in evs:
+            buf.append(e)
+        buf.flush_spill()
+        assert buf.total == 50 and buf.dropped == 0
+        assert buf.spilled == 50 - len(buf.events())
+        assert buf.all_events() == evs  # spool + ring, original order + args
+
+    def test_from_jsonl_preserves_arg_types(self, tmp_path):
+        spool = str(tmp_path / "spill.jsonl")
+        buf = TraceBuffer(cap=1, spill_path=spool)
+        buf.append(TraceEvent(t_ms=1.0, kind="ckpt.apply", partition=2,
+                              args=mkargs(wm=(1, 2, 3), nxt_idx=7)))
+        buf.append(TraceEvent(t_ms=2.0, kind="y"))
+        buf.flush_spill()
+        (back,) = buf.spilled_events()
+        assert back.arg("wm") == (1, 2, 3)  # lists restore as tuples
+        assert back.arg("nxt_idx") == 7
+
+    def test_spilled_chaos_run_audits_clean(self, tmp_path):
+        cfg = dataclasses.replace(
+            CHAOS_CFG, obs_trace_cap=256,
+            obs_spill_path=str(tmp_path / "trace.jsonl"),
+        )
+        h = _run(cfg, CHAOS_SCEN)
+        buf = h.obs.buf
+        buf.flush_spill()
+        assert buf.spilled > 0 and buf.dropped == 0
+        rep = audit(buf.all_events(), cfg=cfg, dropped=buf.dropped)
+        assert rep.ok, rep
